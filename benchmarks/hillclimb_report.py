@@ -1,0 +1,73 @@
+"""§Perf hillclimb report: census roofline terms for baseline vs variants
+of the three chosen cells, joined with the variant dry-run artifacts."""
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import pad_for_tp
+from repro.launch.census import census
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, model_flops
+from repro.launch.specs import SHAPES
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+CELLS = [
+    # (arch, shape, variant, census kwargs, cfg kwargs)
+    ("yi-34b", "train_4k", "baseline", {}, {}),
+    ("yi-34b", "train_4k", "fsdp", {"tp": 1}, {}),
+    ("yi-34b", "train_4k", "fsdpq8", {"tp": 1, "grad_compression": "q8"}, {}),
+    ("qwen3-moe-235b-a22b", "decode_32k", "baseline", {}, {}),
+    ("qwen3-moe-235b-a22b", "decode_32k", "kvseq", {}, {"pad_kv": False}),
+    ("qwen3-moe-235b-a22b", "decode_32k", "kvseq-q8",
+     {"kv_bytes_per_elem": 1.0}, {"pad_kv": False}),
+    ("jamba-1.5-large-398b", "decode_32k", "baseline", {}, {}),
+    ("jamba-1.5-large-398b", "decode_32k", "kvq8",
+     {"kv_bytes_per_elem": 1.0}, {}),
+    ("jamba-1.5-large-398b", "decode_32k", "advisor-q8w-q4kv",
+     {"param_bytes": 1.0, "kv_bytes_per_elem": 0.5}, {}),
+]
+
+
+def main():
+    rows = []
+    for arch, shape, variant, ckw, cfgkw in CELLS:
+        cfg = pad_for_tp(get_config(arch), 16, **cfgkw)
+        info = SHAPES[shape]
+        c = census(cfg, info["kind"], info["batch"], info["seq"], 256,
+                   **({"tp": 16} | ckw))
+        t = {"compute": c.flops / PEAK_FLOPS,
+             "memory": c.hbm_bytes / HBM_BW,
+             "collective": c.wire_bytes / LINK_BW}
+        mf = model_flops(cfg, info) / 256
+        bound = max(t.values())
+        # attach the dry-run artifact if present
+        suffix = "" if variant == "baseline" else f"__{variant}"
+        f = RESULTS / "dryrun" / f"{arch}__{shape}__16x16{suffix}.json"
+        dry = json.loads(f.read_text()) if f.exists() else None
+        rows.append({
+            "arch": arch, "shape": shape, "variant": variant,
+            "t_compute_ms": t["compute"] * 1e3,
+            "t_memory_ms": t["memory"] * 1e3,
+            "t_collective_ms": t["collective"] * 1e3,
+            "bottleneck": max(t, key=t.get),
+            "roofline_fraction": (mf / PEAK_FLOPS) / bound,
+            "temp_gb": (dry["memory"]["temp_bytes"] / 1e9
+                        if dry and dry.get("status") == "ok" else None),
+            "compiled": bool(dry and dry.get("status") == "ok"),
+        })
+    (RESULTS / "hillclimb.json").write_text(json.dumps(rows, indent=1))
+    hdr = (f"{'cell':44s} {'variant':16s} {'comp':>8s} {'mem':>8s} "
+           f"{'coll':>8s} {'bound':>10s} {'RF':>5s} {'tempGB':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']+'/'+r['shape']:44s} {r['variant']:16s} "
+              f"{r['t_compute_ms']:7.1f}m {r['t_memory_ms']:7.2f}m "
+              f"{r['t_collective_ms']:7.1f}m {r['bottleneck']:>10s} "
+              f"{r['roofline_fraction']:5.2f} "
+              f"{(r['temp_gb'] if r['temp_gb'] is not None else float('nan')):7.1f}")
+
+
+if __name__ == "__main__":
+    main()

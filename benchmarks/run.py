@@ -1,0 +1,43 @@
+"""Benchmark harness: one entry per paper table/figure + the TPU adaptation.
+
+Prints `name,us_per_call,derived` CSV (one line per benchmark) and writes
+full row data to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from . import paper_tables as T
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+BENCHES = [
+    ("table1_mv_cardinality_AE", T.table1_mv_cardinality),
+    ("table4_estimation_graph", T.table4_graph_quality),
+    ("fig9_samplecf_errors", T.fig9_samplecf_errors),
+    ("fig10_deduction_errors", T.fig10_deduction_errors),
+    ("fig11_estimation_runtime", T.fig11_estimation_runtime),
+    ("figs12_17_design_quality", T.figs12_17_design_quality),
+    ("tpu_layout_advisor", T.tpu_layout_advisor),
+]
+
+
+def main() -> None:
+    RESULTS.mkdir(exist_ok=True)
+    all_rows = {}
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        all_rows[name] = {"us_per_call": us, "derived": derived,
+                          "rows": rows}
+        print(f"{name},{us:.0f},{derived}")
+    (RESULTS / "benchmarks.json").write_text(
+        json.dumps(all_rows, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

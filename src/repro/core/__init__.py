@@ -1,0 +1,29 @@
+# Compression Aware Physical Database Design (Kimura, Narasayya, Syamala;
+# PVLDB 4(10), 2011) — faithful reproduction of the paper's algorithms:
+# compression methods + SampleCF + deduction (§2, §4), the estimation-plan
+# graph search (§5), skyline candidate selection + backtracking greedy
+# enumeration (§6), the compression-aware what-if cost model (App. A), and
+# join synopses / Adaptive-Estimator MV cardinalities (App. B).
+from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
+from .compression import DEFAULT_ADVISOR_METHODS, METHODS
+from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
+from .relation import ColumnDef, IndexDef, Predicate, Table
+from .samplecf import SampleManager, sample_cf
+from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
+from .whatif import Configuration, SizeProvider, WhatIfOptimizer, \
+    base_configuration, storage_used
+from .workload import BulkInsert, Query, Workload, make_tpch_like, \
+    make_tpch_workload
+
+__all__ = [
+    "AdvisorOptions", "DesignAdvisor", "Recommendation",
+    "DEFAULT_ADVISOR_METHODS", "METHODS",
+    "EstimationPlanner", "NodeKey", "Plan", "State",
+    "ColumnDef", "IndexDef", "Predicate", "Table",
+    "SampleManager", "sample_cf",
+    "ForeignKey", "MVDef", "Schema", "SynopsisManager",
+    "Configuration", "SizeProvider", "WhatIfOptimizer",
+    "base_configuration", "storage_used",
+    "BulkInsert", "Query", "Workload", "make_tpch_like",
+    "make_tpch_workload",
+]

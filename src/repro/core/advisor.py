@@ -1,0 +1,233 @@
+"""DTAc — the compression-aware physical design advisor (paper Figure 1).
+
+Pipeline: per-query candidate generation -> compressed-size estimation
+(§4-§5 framework: amortized SampleCF + deductions chosen by the greedy graph
+search) -> candidate selection (top-k or Skyline, §6.1) -> enumeration
+(pure/density/backtracking greedy, §6.2) -> recommendation.
+
+`AdvisorOptions` reproduces every tool variant the paper evaluates:
+  DTA      = no compression, top-k, pure greedy
+  DTAc     = compression + skyline + backtrack (the full tool)
+  staged   = DTA first, then compress chosen indexes (the poor decoupled
+             strategy of Example 1)
+  ablations= DTAc(None)/DTAc(Skyline)/DTAc(Backtrack) for Figures 12-13
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import candidates as cand
+from .compression import DEFAULT_ADVISOR_METHODS
+from .enumeration import EnumerationResult, greedy_enumerate
+from .estimation_graph import EstimationPlanner, NodeKey, Plan
+from .relation import IndexDef
+from .samplecf import SampleManager
+from .whatif import (Configuration, SizeProvider, WhatIfOptimizer,
+                     base_configuration, storage_used)
+from .workload import Query, Workload
+
+
+@dataclasses.dataclass
+class AdvisorOptions:
+    methods: Tuple[str, ...] = DEFAULT_ADVISOR_METHODS
+    consider_compression: bool = True
+    candidate_mode: str = "skyline"        # "skyline" | "topk"
+    enumeration: str = "backtrack"         # "backtrack" | "pure" | "density"
+    topk: int = 2
+    max_skyline_points: int = 8
+    include_clustered: bool = True
+    e: float = 0.5                         # size-estimation error tolerance
+    q: float = 0.9                         # ... at this confidence
+    use_deduction: bool = True
+    sample_seed: int = 0
+
+    @staticmethod
+    def dta() -> "AdvisorOptions":
+        return AdvisorOptions(consider_compression=False,
+                              candidate_mode="topk", enumeration="pure")
+
+    @staticmethod
+    def dtac() -> "AdvisorOptions":
+        return AdvisorOptions()
+
+
+@dataclasses.dataclass
+class Recommendation:
+    config: Configuration
+    base: Configuration
+    base_cost: float
+    cost: float
+    used_bytes: float
+    budget_bytes: float
+    estimation_cost_pages: float
+    estimation_plan: Optional[Plan]
+    n_sampled: int
+    n_deduced: int
+    candidate_count: int
+    pool_size: int
+    wall_seconds: float
+    steps: List[str]
+
+    @property
+    def improvement(self) -> float:
+        """Estimated runtime improvement vs. the base design (Fig. 12-17)."""
+        if self.base_cost <= 0:
+            return 0.0
+        return 1.0 - self.cost / self.base_cost
+
+
+class DesignAdvisor:
+    def __init__(self, workload: Workload,
+                 options: Optional[AdvisorOptions] = None):
+        self.workload = workload
+        self.schema = workload.schema
+        self.opt = options or AdvisorOptions()
+        self.sizes = SizeProvider(self.schema)
+        self.optimizer = WhatIfOptimizer(workload, self.sizes)
+        self.samples = SampleManager(self.schema.tables,
+                                     seed=self.opt.sample_seed)
+
+    # ------------------------------------------------------------------
+    def per_query_raw(self) -> Dict[str, List[IndexDef]]:
+        return {
+            q.name: cand.syntactically_relevant(
+                q, self.schema.tables[q.table],
+                include_clustered=self.opt.include_clustered)
+            for q in self.workload.queries()
+        }
+
+    def generate_candidates(self) -> List[IndexDef]:
+        per_query = self.per_query_raw()
+        seen: Dict[Tuple, IndexDef] = {}
+        for cands in per_query.values():
+            for idx in cands:
+                seen.setdefault(idx.key, idx)
+        for idx in cand.merged_candidates(per_query):
+            seen.setdefault(idx.key, idx)
+        raw = list(seen.values())
+        if not self.opt.consider_compression:
+            return raw
+        return cand.expand_with_compression(raw, self.opt.methods)
+
+    # ------------------------------------------------------------------
+    def estimate_sizes(self, all_cands: Sequence[IndexDef]
+                       ) -> Tuple[float, Optional[Plan], int, int]:
+        """Register estimated sizes for every compressed candidate."""
+        targets = []
+        tkey_to_defs: Dict[NodeKey, List[IndexDef]] = {}
+        for idx in all_cands:
+            if idx.compression is None or idx.predicate is not None:
+                continue
+            k = NodeKey(idx.table, idx.cols, idx.compression)
+            tkey_to_defs.setdefault(k, []).append(idx)
+        targets = list(tkey_to_defs)
+        if not targets:
+            return 0.0, None, 0, 0
+
+        planner = EstimationPlanner(self.schema.tables)
+        if self.opt.use_deduction:
+            plan = planner.plan(targets, self.opt.e, self.opt.q)
+        else:
+            # "All": SampleCF on every target (the paper's baseline)
+            from .estimation_graph import F_GRID
+            plan = None
+            for f in F_GRID:
+                p = planner.greedy(targets, f, self.opt.e, 1.1)  # q>1 forces
+                # q>1 makes every deduction fail the constraint => all sampled
+                if p.feasible or plan is None:
+                    plan = p
+                    break
+        ests = planner.execute(plan, self.samples)
+        for k, est in ests.items():
+            for idx in tkey_to_defs.get(k, [IndexDef(k.table, k.cols,
+                                                     k.method)]):
+                self.sizes.register(idx, est.est_bytes)
+        # clustered variants share sizes with their (table, colset): rely on
+        # registration of the exact cols; clustered candidates were included
+        # in targets because expand kept their cols tuples.
+        return plan.total_cost, plan, plan.n_sampled(), plan.n_deduced()
+
+    # ------------------------------------------------------------------
+    def recommend(self, budget_bytes: float) -> Recommendation:
+        t0 = time.perf_counter()
+        base = base_configuration(self.schema)
+        base_cost = self.optimizer.workload_cost(base)
+
+        all_cands = self.generate_candidates()
+        est_cost, plan, n_s, n_d = self.estimate_sizes(all_cands)
+
+        # per-query candidate selection
+        per_query = self.per_query_raw()
+        merged = cand.merged_candidates(per_query)
+        pool: Dict[Tuple, IndexDef] = {}
+        n_cand = 0
+        for q in self.workload.queries():
+            raw = per_query[q.name]
+            if self.opt.consider_compression:
+                raw = cand.expand_with_compression(raw, self.opt.methods)
+            costed = cand.cost_candidates(q, raw, base, self.optimizer,
+                                          self.sizes)
+            n_cand += len(costed)
+            if self.opt.candidate_mode == "skyline":
+                sel = cand.select_skyline(costed)
+                sel = cand.skyline_representatives(
+                    sel, self.opt.max_skyline_points)
+            else:
+                sel = cand.select_topk(costed, self.opt.topk)
+            for c in sel:
+                pool.setdefault(c.index.key, c.index)
+
+        # merged candidates enter the pool directly (Figure 1: Merging sits
+        # between candidate selection and enumeration)
+        merged_all = (cand.expand_with_compression(merged, self.opt.methods)
+                      if self.opt.consider_compression else merged)
+        for idx in merged_all:
+            pool.setdefault(idx.key, idx)
+
+        res = greedy_enumerate(self.optimizer, self.sizes,
+                               list(pool.values()), base, budget_bytes,
+                               variant=self.opt.enumeration)
+        return Recommendation(
+            config=res.config, base=base, base_cost=base_cost, cost=res.cost,
+            used_bytes=res.used_bytes, budget_bytes=budget_bytes,
+            estimation_cost_pages=est_cost, estimation_plan=plan,
+            n_sampled=n_s, n_deduced=n_d, candidate_count=n_cand,
+            pool_size=len(pool), wall_seconds=time.perf_counter() - t0,
+            steps=res.steps)
+
+
+def staged_recommend(workload: Workload, budget_bytes: float,
+                     methods: Sequence[str] = DEFAULT_ADVISOR_METHODS
+                     ) -> Recommendation:
+    """The decoupled strategy of Example 1: select uncompressed indexes
+    first, then compress the chosen ones to reclaim space (repeat once)."""
+    adv = DesignAdvisor(workload, AdvisorOptions.dta())
+    rec = adv.recommend(budget_bytes)
+    # stage 2: compress every selected secondary index with the best method
+    sizes, optimizer = adv.sizes, adv.optimizer
+    # register sizes for compressed variants of the chosen indexes
+    chosen = [i for i in rec.config.indexes if not i.clustered]
+    variants = cand.expand_with_compression(chosen, methods)
+    planner = EstimationPlanner(adv.schema.tables)
+    targets = [NodeKey(i.table, i.cols, i.compression) for i in variants
+               if i.compression is not None]
+    if targets:
+        plan = planner.plan(targets, 0.5, 0.9)
+        for k, est in planner.execute(plan, adv.samples).items():
+            sizes.register(IndexDef(k.table, k.cols, k.method), est.est_bytes)
+    config = rec.config
+    for idx in chosen:
+        best = (optimizer.workload_cost(config), config)
+        for m in methods:
+            cfg2 = config.replace(idx, idx.with_compression(m))
+            c2 = optimizer.workload_cost(cfg2)
+            if c2 < best[0]:
+                best = (c2, cfg2)
+        config = best[1]
+    # stage 3: with reclaimed space, run plain greedy again on leftovers
+    used = storage_used(config, rec.base, sizes)
+    return dataclasses.replace(
+        rec, config=config, cost=optimizer.workload_cost(config),
+        used_bytes=used)

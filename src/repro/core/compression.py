@@ -1,0 +1,160 @@
+"""Compression methods (paper §2.1).
+
+Five methods: NULL suppression (NS), global dictionary (GDICT), page-local
+dictionary (LDICT), prefix suppression (PREFIX), run-length encoding (RLE).
+
+NS and GDICT are order-INdependent (ORD-IND): the compressed size depends only
+on the multiset of values.  LDICT, PREFIX and RLE are order-DEPENDENT
+(ORD-DEP): the size depends on how values are distributed across pages, i.e.
+on the index sort order (paper Figure 2).
+
+All sizes are *payload bytes*; the cost model converts bytes -> pages.
+Everything is vectorized NumPy so SampleCF and full-index sizing are cheap.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence
+
+import numpy as np
+
+from .relation import ROW_OVERHEAD, rows_per_page
+
+ORD_IND = "ORD-IND"
+ORD_DEP = "ORD-DEP"
+
+# per-page dictionary/metadata overhead for page-local methods
+PAGE_META = 16
+
+
+def significant_bytes(v: np.ndarray) -> np.ndarray:
+    """Bytes needed to represent each value (leading zero bytes stripped)."""
+    v = np.asarray(v, dtype=np.uint64)
+    out = np.ones(v.shape, dtype=np.int64)
+    for k in range(1, 8):
+        out += (v >= np.uint64(1) << np.uint64(8 * k)).astype(np.int64)
+    return out
+
+
+def _pages(col: np.ndarray, rpp: int) -> np.ndarray:
+    """Reshape a column (in index order) into (npages, rpp), edge-padded."""
+    n = col.shape[0]
+    npages = -(-n // rpp)
+    pad = npages * rpp - n
+    if pad:
+        col = np.concatenate([col, np.repeat(col[-1], pad)])
+    return col.reshape(npages, rpp), n
+
+
+def _ptr_bytes(ndv) -> np.ndarray:
+    """Bytes for a dictionary pointer addressing `ndv` entries."""
+    ndv = np.asarray(ndv, dtype=np.int64)
+    return np.where(ndv <= 256, 1, np.where(ndv <= 65536, 2, 3)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Per-column compressed sizes. data is (nrows, ncols) in index order.
+# ---------------------------------------------------------------------------
+
+def _ns_bytes(col: np.ndarray, width: int, rpp: int) -> int:
+    # 4-bit length descriptor per value (SQL Server row-compression style),
+    # never exceeding the uncompressed width.
+    sig = np.minimum(significant_bytes(col), width)
+    half_bytes = np.minimum(2 * sig + 1, 2 * width)
+    return int((int(np.sum(half_bytes)) + 1) // 2)
+
+
+def _gdict_bytes(col: np.ndarray, width: int, rpp: int) -> int:
+    ndv = int(np.unique(col).size)
+    ptr = int(_ptr_bytes(ndv))
+    return ndv * width + col.shape[0] * ptr
+
+
+def _ldict_bytes(col: np.ndarray, width: int, rpp: int) -> int:
+    pages, n = _pages(col, rpp)
+    srt = np.sort(pages, axis=1)
+    ndv_p = 1 + np.count_nonzero(np.diff(srt, axis=1), axis=1)
+    ptr = _ptr_bytes(ndv_p)
+    # per-page: dictionary entries + per-row pointers (+ page metadata)
+    rows_in_page = np.full(pages.shape[0], rpp, dtype=np.int64)
+    if n % rpp:
+        rows_in_page[-1] = n % rpp
+    per_page = ndv_p * width + rows_in_page * ptr + PAGE_META
+    cap = rows_in_page * width  # never bigger than uncompressed
+    return int(np.sum(np.minimum(per_page, cap + PAGE_META)))
+
+
+def _prefix_bytes(col: np.ndarray, width: int, rpp: int) -> int:
+    pages, n = _pages(col, rpp)
+    mn = pages.min(axis=1).astype(np.uint64)
+    mx = pages.max(axis=1).astype(np.uint64)
+    xor = mn ^ mx
+    diff_bytes = np.where(xor == 0, 0, significant_bytes(xor))
+    common = np.maximum(width - diff_bytes, 0)
+    rows_in_page = np.full(pages.shape[0], rpp, dtype=np.int64)
+    if n % rpp:
+        rows_in_page[-1] = n % rpp
+    # page stores the prefix once; rows store 1 marker + suffix bytes
+    per_page = common + rows_in_page * (1 + width - common) + PAGE_META
+    cap = rows_in_page * width
+    return int(np.sum(np.minimum(per_page, cap + PAGE_META)))
+
+
+def _rle_bytes(col: np.ndarray, width: int, rpp: int) -> int:
+    pages, n = _pages(col, rpp)
+    runs = 1 + np.count_nonzero(np.diff(pages, axis=1), axis=1)
+    rows_in_page = np.full(pages.shape[0], rpp, dtype=np.int64)
+    if n % rpp:
+        rows_in_page[-1] = n % rpp
+    per_page = runs * (width + 2) + PAGE_META  # value + 2-byte run length
+    cap = rows_in_page * width
+    return int(np.sum(np.minimum(per_page, cap + PAGE_META)))
+
+
+class Method:
+    def __init__(self, name: str, kind: str,
+                 fn: Callable[[np.ndarray, int, int], int],
+                 alpha: float, beta: float):
+        self.name = name
+        self.kind = kind          # ORD_IND or ORD_DEP
+        self._fn = fn
+        # cost-model constants (paper App. A): alpha = CPU to compress one
+        # tuple on update; beta = CPU to decompress one column of one tuple.
+        self.alpha = alpha
+        self.beta = beta
+
+    @property
+    def order_dependent(self) -> bool:
+        return self.kind == ORD_DEP
+
+    def compressed_bytes(self, data: np.ndarray, widths: Sequence[int]) -> int:
+        """Payload bytes of the compressed index (data in index order)."""
+        rw = int(sum(widths))
+        rpp = rows_per_page(rw)
+        total = data.shape[0] * ROW_OVERHEAD
+        for j, w in enumerate(widths):
+            total += self._fn(data[:, j], int(w), rpp)
+        return int(total)
+
+
+# alpha/beta loosely follow the paper's ROW-vs-PAGE ordering: page-local
+# methods cost more CPU than row methods (App. A; [13] microbenchmarks).
+METHODS: Dict[str, Method] = {
+    "NS":     Method("NS", ORD_IND, _ns_bytes, alpha=1.0, beta=0.20),
+    "GDICT":  Method("GDICT", ORD_IND, _gdict_bytes, alpha=1.5, beta=0.25),
+    "LDICT":  Method("LDICT", ORD_DEP, _ldict_bytes, alpha=2.5, beta=0.45),
+    "PREFIX": Method("PREFIX", ORD_DEP, _prefix_bytes, alpha=2.0, beta=0.35),
+    "RLE":    Method("RLE", ORD_DEP, _rle_bytes, alpha=1.8, beta=0.30),
+}
+
+# The two "packages" the advisor offers by default, mirroring SQL Server's
+# ROW (null suppression) and PAGE (local dictionary) compression.
+DEFAULT_ADVISOR_METHODS = ("NS", "LDICT")
+
+
+def uncompressed_payload_bytes(nrows: int, widths: Sequence[int]) -> int:
+    return nrows * (int(sum(widths)) + ROW_OVERHEAD)
+
+
+def compressed_payload_bytes(method: str, data: np.ndarray,
+                             widths: Sequence[int]) -> int:
+    return METHODS[method].compressed_bytes(data, widths)

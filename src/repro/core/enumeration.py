@@ -1,0 +1,153 @@
+"""Enumeration (paper §6.2): greedy search over the candidate pool.
+
+Three variants:
+* pure      — classic greedy: add the index with the largest workload-cost
+              reduction that still fits the budget.
+* density   — greedy on benefit/size ratio (DB2-style [15]).
+* backtrack — the paper's contribution: pure greedy, but when the best
+              choice is OVERSIZED, try to recover it by replacing members
+              of the would-be configuration with their compressed variants
+              (Figure 8), then compare against the feasible greedy choices.
+
+Clustered candidates replace the table's current clustered layout instead of
+being added alongside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .relation import IndexDef
+from .whatif import Configuration, SizeProvider, WhatIfOptimizer, storage_used
+
+
+@dataclasses.dataclass
+class EnumerationResult:
+    config: Configuration
+    cost: float
+    used_bytes: float
+    steps: List[str]
+
+
+def _apply(config: Configuration, idx: IndexDef) -> Configuration:
+    if idx.clustered:
+        old = config.clustered(idx.table)
+        return config.replace(old, idx) if old else config.add(idx)
+    return config.add(idx)
+
+
+def _variants_of(idx: IndexDef, pool: Sequence[IndexDef]) -> List[IndexDef]:
+    """Compressed variants of `idx` available in the pool."""
+    return [p for p in pool
+            if p.table == idx.table and p.cols == idx.cols
+            and p.clustered == idx.clustered and p.predicate == idx.predicate
+            and p.compression != idx.compression
+            and p.compression is not None]
+
+
+def _already_present(config: Configuration, idx: IndexDef) -> bool:
+    for i in config.indexes:
+        if (i.table == idx.table and i.cols == idx.cols
+                and i.predicate == idx.predicate
+                and i.clustered == idx.clustered):
+            return True
+    return False
+
+
+def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
+                     pool: Sequence[IndexDef], base: Configuration,
+                     budget_bytes: float, variant: str = "backtrack",
+                     max_indexes: int = 64) -> EnumerationResult:
+    assert variant in ("pure", "density", "backtrack")
+    config = base
+    cost = optimizer.workload_cost(config)
+    steps: List[str] = []
+
+    for _ in range(max_indexes):
+        used = storage_used(config, base, sizes)
+        best_feasible: Optional[Tuple[float, IndexDef, Configuration]] = None
+        best_any: Optional[Tuple[float, IndexDef, Configuration]] = None
+
+        for idx in pool:
+            if _already_present(config, idx):
+                continue
+            cfg2 = _apply(config, idx)
+            used2 = storage_used(cfg2, base, sizes)
+            cost2 = optimizer.workload_cost(cfg2)
+            benefit = cost - cost2
+            if benefit <= 1e-9:
+                continue
+            delta_size = max(used2 - used, 1.0)
+            score = benefit / delta_size if variant == "density" else benefit
+            entry = (score, idx, cfg2)
+            if used2 <= budget_bytes:
+                if best_feasible is None or score > best_feasible[0]:
+                    best_feasible = entry
+            if best_any is None or score > best_any[0]:
+                best_any = entry
+
+        chosen: Optional[Tuple[IndexDef, Configuration]] = None
+        if variant == "backtrack" and best_any is not None and (
+                best_feasible is None or best_any[1] != best_feasible[1]):
+            # The greedy-best choice is oversized: attempt recovery by
+            # swapping each member for a compressed variant (Figure 8).
+            oversized_cfg = best_any[2]
+            recovered = _recover_oversized(
+                oversized_cfg, base, pool, sizes, optimizer, budget_bytes)
+            cand_cost = optimizer.workload_cost(recovered) \
+                if recovered is not None else float("inf")
+            feas_cost = optimizer.workload_cost(best_feasible[2]) \
+                if best_feasible is not None else float("inf")
+            if recovered is not None and cand_cost < min(feas_cost, cost):
+                chosen = (best_any[1], recovered)
+                steps.append(f"backtrack-recovered via {best_any[1].label()}")
+            elif best_feasible is not None:
+                chosen = (best_feasible[1], best_feasible[2])
+        elif best_feasible is not None:
+            chosen = (best_feasible[1], best_feasible[2])
+
+        if chosen is None:
+            break
+        config = chosen[1]
+        new_cost = optimizer.workload_cost(config)
+        steps.append(f"add {chosen[0].label()}  cost {cost:.1f}->{new_cost:.1f}")
+        cost = new_cost
+
+    return EnumerationResult(config=config, cost=cost,
+                             used_bytes=storage_used(config, base, sizes),
+                             steps=steps)
+
+
+def _recover_oversized(config: Configuration, base: Configuration,
+                       pool: Sequence[IndexDef], sizes: SizeProvider,
+                       optimizer: WhatIfOptimizer,
+                       budget_bytes: float) -> Optional[Configuration]:
+    """Figure 8: replace members with compressed variants until it fits.
+
+    Considers replacing each index (including repeatedly, cheapest-cost-loss
+    first) and returns the fastest configuration that fits, or None.
+    """
+    best: Optional[Tuple[float, Configuration]] = None
+    frontier = [config]
+    seen = {config.indexes}
+    for _ in range(4):  # bounded replacement depth
+        nxt: List[Configuration] = []
+        for cfg in frontier:
+            for idx in sorted(cfg.indexes, key=lambda i: i.label()):
+                if idx.compression is not None:
+                    continue
+                for var in _variants_of(idx, pool):
+                    cfg2 = cfg.replace(idx, var)
+                    if cfg2.indexes in seen:
+                        continue
+                    seen.add(cfg2.indexes)
+                    if storage_used(cfg2, base, sizes) <= budget_bytes:
+                        c = optimizer.workload_cost(cfg2)
+                        if best is None or c < best[0]:
+                            best = (c, cfg2)
+                    else:
+                        nxt.append(cfg2)
+        if best is not None or not nxt:
+            break
+        frontier = nxt
+    return best[1] if best else None

@@ -1,0 +1,114 @@
+"""Stochastic error model for size estimation (paper §5.1 + Appendix C).
+
+Every estimator's result, divided by the true size, is a random variable X
+(X=1 is perfect).  We track (E[X], Std[X]) per estimate:
+
+* SampleCF errors follow the c*ln(f) fits of Table 2.
+* Deduction errors follow the linear-in-a fits of Table 3 (a = number of
+  indexes extrapolated from).
+* Deduced estimates compose as products of RVs; the variance of a product of
+  independent RVs is Goodman's formula [9]:
+      V(prod X_i) = prod(V_i + E_i^2) - prod(E_i^2).
+* The accuracy constraint holds if P(1/(1+e) <= X <= 1+e) >= q under a
+  normal approximation (App. C observed near-normal error distributions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+from .compression import METHODS, ORD_DEP
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorRV:
+    mean: float  # E[X]
+    std: float   # Std[X]
+
+    @property
+    def var(self) -> float:
+        return self.std * self.std
+
+
+EXACT = ErrorRV(1.0, 0.0)
+
+# Appendix-C style fits (bias/stddev = c * (-ln f)); NS bias is ~0
+# ("unbiased", [11]).  The ORD-IND constants match the paper's Table 2.
+# The ORD-DEP constants are RE-FIT on our substrate (benchmarks/fig9): our
+# tables are ~100x smaller than TPC-H SF1, so a sample of fraction f shrinks
+# value run lengths below 1 and local-dictionary sizes are overestimated much
+# more than in the paper (bias ~0.08*(-ln f) raw).  The framework only needs
+# errors to be *characterizable* (App. C last paragraph), so we carry our own
+# constants — and additionally BIAS-CORRECT the ORD-DEP estimate by the
+# fitted E[X] (a beyond-paper extension; see EXPERIMENTS.md).
+_SAMPLECF_FITS = {
+    "ORD-IND": {"bias": 0.0, "std": 0.0062},
+    "ORD-DEP": {"bias": 0.08, "std": 0.055},
+}
+
+# Table 3 fits for deductions. a = number of extrapolated indexes.
+_COLSET = ErrorRV(1.0, 0.0003)
+_COLEXT = {
+    "ORD-IND": {"bias": +0.01, "std": 0.002},
+    "ORD-DEP": {"bias": -0.03, "std": 0.01},
+}
+
+
+def samplecf_bias(method: str, f: float) -> float:
+    """Fitted E[X] of a raw SampleCF estimate (used for bias correction)."""
+    fit = _SAMPLECF_FITS[METHODS[method].kind]
+    lf = -math.log(max(min(f, 1.0), 1e-9))
+    return 1.0 + fit["bias"] * lf
+
+
+def samplecf_error(method: str, f: float, corrected: bool = True) -> ErrorRV:
+    """Error RV of SampleCF.  With `corrected` (the default), the estimate is
+    divided by the fitted E[X], leaving mean 1 and a shrunk std."""
+    kind = METHODS[method].kind
+    fit = _SAMPLECF_FITS[kind]
+    lf = -math.log(max(min(f, 1.0), 1e-9))  # -ln f  >= 0
+    mean = 1.0 + fit["bias"] * lf
+    std = fit["std"] * lf
+    if corrected:
+        return ErrorRV(1.0, std / mean)
+    return ErrorRV(mean, std)
+
+
+def colset_error() -> ErrorRV:
+    return _COLSET
+
+
+def colext_error(method: str, a: int) -> ErrorRV:
+    kind = METHODS[method].kind
+    fit = _COLEXT[kind]
+    return ErrorRV(1.0 + fit["bias"] * a, fit["std"] * a)
+
+
+def compose(rvs: Iterable[ErrorRV]) -> ErrorRV:
+    """Product of independent RVs: E = prod E_i; V per Goodman [9]."""
+    e_prod = 1.0
+    v_term = 1.0
+    e2_term = 1.0
+    for rv in rvs:
+        e_prod *= rv.mean
+        v_term *= rv.var + rv.mean * rv.mean
+        e2_term *= rv.mean * rv.mean
+    var = max(v_term - e2_term, 0.0)
+    return ErrorRV(e_prod, math.sqrt(var))
+
+
+def _phi(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def prob_within(rv: ErrorRV, e: float) -> float:
+    """P(1/(1+e) <= X <= 1+e) under N(mean, std^2)."""
+    lo, hi = 1.0 / (1.0 + e), 1.0 + e
+    if rv.std <= 1e-12:
+        return 1.0 if lo <= rv.mean <= hi else 0.0
+    return _phi((hi - rv.mean) / rv.std) - _phi((lo - rv.mean) / rv.std)
+
+
+def satisfies(rv: ErrorRV, e: float, q: float) -> bool:
+    return prob_within(rv, e) >= q

@@ -1,0 +1,373 @@
+"""Estimation-plan optimization over the index/deduction graph (paper §5).
+
+Given target compressed indexes, a tolerable error e and confidence q, choose
+for each index either SampleCF (costly, accurate) or a deduction (free, less
+accurate) plus a single sampling fraction f, minimizing total estimation cost
+subject to: P(|relative error| within e) >= q for every target.
+
+Implements the paper's greedy algorithm (§5.2 pseudocode) and the exponential
+Optimal recursion (Appendix D) used as a quality yardstick in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import deduction as ded
+from . import errors as err
+from .compression import METHODS
+from .relation import IndexDef, Table, uncompressed_pages
+from .samplecf import SampleManager, SizeEstimate, sample_cf
+
+F_GRID = (0.01, 0.025, 0.05, 0.075, 0.10)
+
+
+class State(enum.Enum):
+    NONE = "NONE"
+    DEDUCED = "DEDUCED"
+    SAMPLED = "SAMPLED"
+    EXACT = "EXACT"  # existing index: true size known from catalog (§5.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeKey:
+    table: str
+    cols: Tuple[str, ...]
+    method: str
+
+    def label(self) -> str:
+        return f"{self.table}({','.join(self.cols)})^{self.method}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Deduction:
+    kind: str                       # "colset" | "colext"
+    children: Tuple[NodeKey, ...]
+    parts: Tuple[Tuple[str, ...], ...]  # column partition (colext)
+
+
+@dataclasses.dataclass
+class Node:
+    key: NodeKey
+    state: State = State.NONE
+    chosen: Optional[Deduction] = None
+    rv: err.ErrorRV = err.EXACT
+    exact_bytes: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Plan:
+    f: float
+    nodes: Dict[NodeKey, Node]
+    targets: Tuple[NodeKey, ...]
+    total_cost: float
+    feasible: bool
+
+    def states(self) -> Dict[NodeKey, State]:
+        return {k: n.state for k, n in self.nodes.items()}
+
+    def n_sampled(self) -> int:
+        return sum(1 for n in self.nodes.values() if n.state is State.SAMPLED)
+
+    def n_deduced(self) -> int:
+        return sum(1 for n in self.nodes.values() if n.state is State.DEDUCED)
+
+
+def sampling_cost(table: Table, key: NodeKey, f: float) -> float:
+    """Cost of SampleCF = pages of the index built on the sample (§5.1)."""
+    widths = [table.col_by_name[c].width for c in key.cols]
+    n = max(2, int(round(table.nrows * f)))
+    return float(uncompressed_pages(n, widths))
+
+
+def candidate_deductions(key: NodeKey, present: Sequence[NodeKey]
+                         ) -> List[Deduction]:
+    """Enumerate deductions for `key` (bounded, per §5.2 Figure 3).
+
+    * ColSet: any present node with the same column SET + method (ORD-IND).
+    * ColExt partitions: all singletons; (prefix, last); (first, rest).
+    """
+    out: List[Deduction] = []
+    cols = key.cols
+    if not METHODS[key.method].order_dependent:
+        cs = frozenset(cols)
+        for other in present:
+            if (other.table == key.table and other.method == key.method
+                    and other.cols != cols and frozenset(other.cols) == cs):
+                out.append(Deduction("colset", (other,), (other.cols,)))
+    if len(cols) >= 2:
+        partitions = {tuple((c,) for c in cols)}
+        partitions.add((cols[:-1], (cols[-1],)))
+        partitions.add(((cols[0],), cols[1:]))
+        for parts in sorted(partitions):
+            children = tuple(NodeKey(key.table, p, key.method) for p in parts)
+            out.append(Deduction("colext", children, parts))
+    return out
+
+
+def _deduction_rv(key: NodeKey, d: Deduction,
+                  nodes: Dict[NodeKey, Node]) -> err.ErrorRV:
+    child_rvs = [nodes[c].rv for c in d.children]
+    if d.kind == "colset":
+        drv = err.colset_error()
+    else:
+        drv = err.colext_error(key.method, len(d.children))
+    return err.compose(child_rvs + [drv])
+
+
+class EstimationPlanner:
+    """Builds the graph and runs the greedy (or optimal) state assignment."""
+
+    def __init__(self, tables: Dict[str, Table],
+                 existing: Optional[Dict[NodeKey, float]] = None):
+        self.tables = tables
+        self.existing = dict(existing or {})
+
+    # ------------------------------------------------------------------
+    # Greedy algorithm (paper §5.2 pseudocode)
+    # ------------------------------------------------------------------
+    def greedy(self, targets: Sequence[NodeKey], f: float, e: float,
+               q: float) -> Plan:
+        nodes: Dict[NodeKey, Node] = {}
+        # Line 1: existing indexes enter as SAMPLED (zero error / zero cost;
+        # we use the dedicated EXACT state).
+        for k, size in self.existing.items():
+            nodes[k] = Node(k, State.EXACT, rv=err.EXACT, exact_bytes=size)
+        # Line 2: targets start as NONE.
+        for t in targets:
+            if t not in nodes:
+                nodes[t] = Node(t)
+
+        def ensure(k: NodeKey) -> Node:
+            if k not in nodes:
+                nodes[k] = Node(k)
+            return nodes[k]
+
+        def known(n: Node) -> bool:
+            return n.state in (State.SAMPLED, State.DEDUCED, State.EXACT)
+
+        total_cost = 0.0
+        feasible = True
+        used_as_child: set = set()
+        # Line 3: narrower to wider.
+        order = sorted(targets, key=lambda k: (len(k.cols), k.cols))
+        for t in order:
+            node = nodes[t]
+            table = self.tables[t.table]
+            if known(node):
+                continue
+            # Lines 4-5: materialize candidate deductions + children.
+            cands = candidate_deductions(t, list(nodes))
+            for d in cands:
+                for c in d.children:
+                    ensure(c)
+
+            # Line 6-7: an already-enabled deduction that satisfies e,q.
+            best_d, best_p = None, -1.0
+            for d in cands:
+                if all(known(nodes[c]) for c in d.children):
+                    rv = _deduction_rv(t, d, nodes)
+                    p = err.prob_within(rv, e)
+                    if p >= q and p > best_p:
+                        best_d, best_p = d, p
+            if best_d is not None:
+                node.state = State.DEDUCED
+                node.chosen = best_d
+                node.rv = _deduction_rv(t, best_d, nodes)
+                used_as_child.update(best_d.children)
+                continue
+
+            # Lines 8-9: enable a deduction by sampling its unknown children
+            # if that is cheaper than sampling this node.
+            my_cost = sampling_cost(table, t, f)
+            best_d, best_cost = None, my_cost
+            for d in cands:
+                unknown = [c for c in d.children if not known(nodes[c])]
+                if not unknown:
+                    continue  # handled above (did not satisfy constraint)
+                extra = sum(sampling_cost(self.tables[c.table], c, f)
+                            for c in unknown)
+                if extra >= best_cost:
+                    continue
+                # hypothetical rvs with the unknown children sampled
+                trial = {c: err.samplecf_error(c.method, f) for c in unknown}
+                child_rvs = [trial.get(c, nodes[c].rv) for c in d.children]
+                drv = (err.colset_error() if d.kind == "colset"
+                       else err.colext_error(t.method, len(d.children)))
+                rv = err.compose(child_rvs + [drv])
+                if err.prob_within(rv, e) >= q:
+                    best_d, best_cost = d, extra
+            if best_d is not None:
+                for c in best_d.children:
+                    cn = nodes[c]
+                    if not known(cn):
+                        cn.state = State.SAMPLED
+                        cn.rv = err.samplecf_error(c.method, f)
+                        total_cost += sampling_cost(self.tables[c.table], c, f)
+                node.state = State.DEDUCED
+                node.chosen = best_d
+                node.rv = _deduction_rv(t, best_d, nodes)
+                used_as_child.update(best_d.children)
+                continue
+
+            # Lines 10-11: fall back to SampleCF on this node.
+            node.state = State.SAMPLED
+            node.rv = err.samplecf_error(t.method, f)
+            total_cost += my_cost
+            if not err.satisfies(node.rv, e, q):
+                feasible = False  # even sampling cannot satisfy the bound
+
+        # Lines 13-14: cleanup — drop nodes neither targeted nor used.
+        tset = set(targets)
+        for k in sorted(list(nodes), key=lambda k: -len(k.cols)):
+            n = nodes[k]
+            if k in tset or k in used_as_child or n.state is State.EXACT:
+                continue
+            if n.state is State.SAMPLED:
+                total_cost -= sampling_cost(self.tables[k.table], k, f)
+            del nodes[k]
+
+        for t in targets:
+            if not err.satisfies(nodes[t].rv, e, q):
+                feasible = False
+        return Plan(f=f, nodes=nodes, targets=tuple(targets),
+                    total_cost=total_cost, feasible=feasible)
+
+    def plan(self, targets: Sequence[NodeKey], e: float, q: float,
+             f_grid: Sequence[float] = F_GRID) -> Plan:
+        """Outer loop over sampling fractions (§5.2 last paragraph)."""
+        best: Optional[Plan] = None
+        fallback: Optional[Plan] = None
+        for f in f_grid:
+            p = self.greedy(targets, f, e, q)
+            if p.feasible and (best is None or p.total_cost < best.total_cost):
+                best = p
+            if fallback is None or p.total_cost < fallback.total_cost:
+                fallback = p
+        return best if best is not None else fallback  # type: ignore
+
+    # ------------------------------------------------------------------
+    # Optimal exact algorithm (Appendix D) — exponential; benchmarks only.
+    # ------------------------------------------------------------------
+    def optimal(self, targets: Sequence[NodeKey], f: float, e: float,
+                q: float, max_nodes: int = 14) -> Plan:
+        targets = list(targets)
+        if len(targets) > max_nodes:
+            raise ValueError("optimal(): too many targets (exponential)")
+        base_nodes: Dict[NodeKey, Node] = {}
+        for k, size in self.existing.items():
+            base_nodes[k] = Node(k, State.EXACT, rv=err.EXACT, exact_bytes=size)
+
+        # Universe: targets + all their (recursive) potential children.
+        universe: Dict[NodeKey, List[Deduction]] = {}
+        frontier = list(targets)
+        while frontier:
+            k = frontier.pop()
+            if k in universe:
+                continue
+            cands = candidate_deductions(
+                k, list(universe) + list(base_nodes) + list(targets))
+            universe[k] = cands
+            for d in cands:
+                for c in d.children:
+                    if c not in universe:
+                        frontier.append(c)
+
+        best: List[Optional[Plan]] = [None]
+
+        def recurse(states: Dict[NodeKey, Tuple[State, Optional[Deduction]]],
+                    remaining: List[NodeKey], cost: float) -> None:
+            if best[0] is not None and cost >= best[0].total_cost:
+                return  # prune
+            if not remaining:
+                nodes = dict(base_nodes)
+                ok = True
+                # resolve rvs narrow->wide
+                for k in sorted(states, key=lambda k: (len(k.cols), k.cols)):
+                    st, d = states[k]
+                    n = Node(k, st)
+                    if st is State.SAMPLED:
+                        n.rv = err.samplecf_error(k.method, f)
+                    else:
+                        if any(c not in nodes and c not in states
+                               for c in d.children):
+                            ok = False
+                            break
+                        n.chosen = d
+                        n.rv = _deduction_rv(k, d, {**nodes})
+                    nodes[k] = n
+                if not ok:
+                    return
+                for t in targets:
+                    if not err.satisfies(nodes[t].rv, e, q):
+                        return
+                best[0] = Plan(f=f, nodes=nodes, targets=tuple(targets),
+                               total_cost=cost, feasible=True)
+                return
+            # branch on the widest remaining index (App. D line 7)
+            remaining = sorted(remaining, key=lambda k: (len(k.cols), k.cols))
+            k = remaining[-1]
+            rest = remaining[:-1]
+            tbl = self.tables[k.table]
+            # option 1: SAMPLED
+            recurse({**states, k: (State.SAMPLED, None)}, rest,
+                    cost + sampling_cost(tbl, k, f))
+            # option 2: each deduction; children must be decided too
+            for d in universe.get(k, []):
+                new_children = [c for c in d.children
+                                if c not in states and c not in base_nodes
+                                and c not in rest and c != k]
+                recurse({**states, k: (State.DEDUCED, d)},
+                        rest + new_children, cost)
+
+        recurse({}, list(targets), 0.0)
+        if best[0] is None:
+            return self.greedy(targets, f, e, q)
+        return best[0]
+
+    # ------------------------------------------------------------------
+    # Plan execution: run SampleCF / deductions, produce actual sizes.
+    # ------------------------------------------------------------------
+    def execute(self, plan: Plan, manager: SampleManager
+                ) -> Dict[NodeKey, SizeEstimate]:
+        out: Dict[NodeKey, SizeEstimate] = {}
+
+        def resolve(k: NodeKey) -> SizeEstimate:
+            if k in out:
+                return out[k]
+            node = plan.nodes[k]
+            table = self.tables[k.table]
+            if node.state is State.EXACT:
+                est = SizeEstimate(
+                    index=IndexDef(k.table, k.cols, k.method),
+                    est_bytes=float(node.exact_bytes), method="exact",
+                    cost_pages=0.0, cf=0.0)
+            elif node.state is State.SAMPLED:
+                idx = IndexDef(k.table, k.cols, k.method)
+                est = sample_cf(manager, idx, plan.f)
+            else:  # DEDUCED
+                d = node.chosen
+                assert d is not None
+                if d.kind == "colset":
+                    size = ded.colset_deduce(resolve(d.children[0]).est_bytes)
+                else:
+                    parts = [(c.cols, resolve(c).est_bytes)
+                             for c in d.children]
+                    size = ded.deduce(table, k.method, k.cols, parts)
+                est = SizeEstimate(
+                    index=IndexDef(k.table, k.cols, k.method),
+                    est_bytes=size, method=f"deduction:{d.kind}",
+                    cost_pages=0.0,
+                    cf=size / max(ded.uncompressed_size(table, k.cols), 1.0))
+            out[k] = est
+            return est
+
+        for t in plan.targets:
+            resolve(t)
+        # also resolve intermediate sampled nodes (useful to callers)
+        for k, n in plan.nodes.items():
+            if n.state is not State.NONE:
+                resolve(k)
+        return out

@@ -1,0 +1,115 @@
+"""SampleCF (paper §2.2) with per-table amortized sampling (§4.1).
+
+SampleCF(I, method, f): take a uniform random sample of fraction f of I's
+table (ONE sample per (table, f), reused for every index on that table —
+the §4.1 amortization), build the index on the sample, compress it, and
+return CF = S^c / S.
+
+The *cost* of a SampleCF call is modeled as the number of pages of the
+index built on the sample, before compression (paper §5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from . import compression
+from .relation import (IndexDef, Table, build_index_data, rows_per_page,
+                       uncompressed_pages)
+
+
+@dataclasses.dataclass
+class SizeEstimate:
+    index: IndexDef
+    est_bytes: float
+    method: str            # "samplecf" | "deduction:..." | "exact"
+    cost_pages: float      # estimation cost charged (paper §5.1)
+    cf: float              # estimated compression fraction
+
+
+class SampleManager:
+    """Caches per-(table, f) samples so sampling cost is paid once (§4.1)."""
+
+    def __init__(self, tables: Dict[str, Table], seed: int = 0):
+        self.tables = dict(tables)
+        self._samples: Dict[Tuple[str, float], Table] = {}
+        self._rng = np.random.default_rng(seed)
+        self.sampling_calls = 0  # how many fresh samples were drawn
+
+    def add_table(self, table: Table) -> None:
+        self.tables[table.name] = table
+
+    def get_sample(self, table_name: str, f: float) -> Table:
+        key = (table_name, round(f, 6))
+        if key not in self._samples:
+            t = self.tables[table_name]
+            n = max(2, int(round(t.nrows * f)))
+            n = min(n, t.nrows)
+            rows = self._rng.choice(t.nrows, size=n, replace=False)
+            self._samples[key] = t.take(np.sort(rows))
+            self.sampling_calls += 1
+        return self._samples[key]
+
+
+def full_index_sizes(table: Table, idx: IndexDef) -> Tuple[int, int]:
+    """(uncompressed_bytes, compressed_bytes) by building the FULL index.
+
+    Prohibitively expensive in a real tool (this is the paper's point) —
+    used here only as ground truth for accuracy experiments.
+    """
+    data = build_index_data(table, idx)
+    widths = [table.col_by_name[c].width for c in idx.cols]
+    s = compression.uncompressed_payload_bytes(data.shape[0], widths)
+    if idx.compression is None:
+        return s, s
+    sc = compression.compressed_payload_bytes(idx.compression, data, widths)
+    return s, sc
+
+
+def sample_cf(manager: SampleManager, idx: IndexDef, f: float,
+              sample_table: Optional[Table] = None,
+              bias_correct: bool = True) -> SizeEstimate:
+    """Estimate the compressed size of `idx` via SampleCF.
+
+    `sample_table` overrides the amortized base sample (used for filtered
+    samples / join synopses, App. B).  `bias_correct` divides the estimate
+    by the fitted E[X] of the method's error model (beyond-paper extension;
+    see errors.samplecf_bias).
+    """
+    table = manager.tables[idx.table]
+    sample = sample_table if sample_table is not None else \
+        manager.get_sample(idx.table, f)
+    widths = [table.col_by_name[c].width for c in idx.cols]
+
+    data = build_index_data(sample, idx)
+    n_sample = data.shape[0]
+    s = compression.uncompressed_payload_bytes(n_sample, widths)
+    if idx.compression is None:
+        cf = 1.0
+    elif n_sample == 0 or s == 0:
+        cf = 1.0
+    else:
+        sc = compression.compressed_payload_bytes(idx.compression, data, widths)
+        cf = sc / s
+        if bias_correct:
+            from . import errors
+            cf = min(cf / errors.samplecf_bias(idx.compression, f), 1.0)
+
+    # scale to the full index cardinality
+    if idx.predicate is not None:
+        full_rows = int(idx.predicate.mask(table).sum())
+    else:
+        full_rows = table.nrows
+    full_bytes = compression.uncompressed_payload_bytes(full_rows, widths)
+    cost = uncompressed_pages(n_sample, widths)
+    return SizeEstimate(index=idx, est_bytes=cf * full_bytes,
+                        method="samplecf", cost_pages=float(cost), cf=cf)
+
+
+def exact_size(table: Table, idx: IndexDef) -> SizeEstimate:
+    """Size of an index that already exists: zero cost, zero error (§5.1)."""
+    s, sc = full_index_sizes(table, idx)
+    return SizeEstimate(index=idx, est_bytes=float(sc), method="exact",
+                        cost_pages=0.0, cf=sc / max(s, 1))

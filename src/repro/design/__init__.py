@@ -1,0 +1,9 @@
+# TPU adaptation of the paper (DESIGN.md §3): compression-aware physical
+# design of a training/serving job's persistent tensors under an HBM budget.
+from .advisor import (Choice, LayoutPlan, TensorClass, job_tensor_classes,
+                      plan_layout, skyline, step_cost)
+from .codecs import CODECS, Codec, decode, encode, sample_cf_bytes
+
+__all__ = ["Choice", "LayoutPlan", "TensorClass", "job_tensor_classes",
+           "plan_layout", "skyline", "step_cost", "CODECS", "Codec",
+           "decode", "encode", "sample_cf_bytes"]

@@ -1,0 +1,106 @@
+"""Tensor codecs — the TPU renderings of the paper's compression methods.
+
+Data-INDEPENDENT-size codecs (quantization: the paper's ORD-IND analogue —
+size known without sampling) and data-DEPENDENT-size codecs (zstd, sparse:
+the ORD-DEP analogue — size estimated by SampleCF on real tensor rows).
+
+Each codec reports:
+  bytes_per_element  (None => data-dependent, needs SampleCF)
+  alpha — relative compress cost per element  (paper App. A, update path)
+  beta  — relative decompress cost per element (read path)
+and implements encode/decode for the checkpoint path (host-side) or defers
+to kernels/ops for the on-device path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import zstandard
+
+from ..kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str
+    bytes_per_element: Optional[float]  # None => data-dependent (SampleCF)
+    alpha: float   # compress cost / element (relative units)
+    beta: float    # decompress cost / element
+    lossless: bool
+
+
+CODECS: Dict[str, Codec] = {
+    "f32":  Codec("f32", 4.0, 0.0, 0.0, True),
+    "bf16": Codec("bf16", 2.0, 0.05, 0.05, False),
+    "q8":   Codec("q8", 1.0 + 4.0 / kref.DEFAULT_BLOCK, 1.0, 0.5, False),
+    "q4":   Codec("q4", 0.5 + 4.0 / kref.DEFAULT_BLOCK, 1.2, 0.7, False),
+    # host-side lossless (checkpoints): size depends on the data => SampleCF
+    "zstd":    Codec("zstd", None, 3.0, 1.5, True),
+    "q8+zstd": Codec("q8+zstd", None, 4.0, 2.0, False),
+}
+
+
+def encode(name: str, arr: np.ndarray) -> Tuple[bytes, dict]:
+    """Host-side encode for checkpoints. Returns (payload, meta)."""
+    meta = {"codec": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    if name == "f32":
+        return np.asarray(arr, np.float32).tobytes(), meta
+    if name == "bf16":
+        import jax.numpy as jnp
+        return np.asarray(jnp.asarray(arr).astype(jnp.bfloat16).view(np.uint16)
+                          ).tobytes(), meta
+    if name == "zstd":
+        return zstandard.compress(np.ascontiguousarray(arr).tobytes(), 3), meta
+    if name in ("q8", "q8+zstd"):
+        import jax.numpy as jnp
+        q, s = kref.quantize_blockwise(jnp.asarray(arr, jnp.float32))
+        payload = np.asarray(q).tobytes() + np.asarray(s).tobytes()
+        meta["scale_shape"] = list(np.asarray(s).shape)
+        if name == "q8+zstd":
+            payload = zstandard.compress(payload, 3)
+        return payload, meta
+    raise KeyError(name)
+
+
+def decode(payload: bytes, meta: dict) -> np.ndarray:
+    import jax.numpy as jnp
+    name = meta["codec"]
+    shape = tuple(meta["shape"])
+    if name == "f32":
+        return np.frombuffer(payload, np.float32).reshape(shape).copy()
+    if name == "bf16":
+        u16 = np.frombuffer(payload, np.uint16).reshape(shape)
+        return np.asarray(jnp.asarray(u16).view(jnp.bfloat16).astype(
+            jnp.float32))
+    if name == "zstd":
+        raw = zstandard.decompress(payload)
+        return np.frombuffer(raw, np.dtype(meta["dtype"])).reshape(shape).copy()
+    if name in ("q8", "q8+zstd"):
+        if name == "q8+zstd":
+            payload = zstandard.decompress(payload)
+        n_q = int(np.prod(shape))
+        sshape = tuple(meta["scale_shape"])
+        q = np.frombuffer(payload[:n_q], np.int8).reshape(shape)
+        s = np.frombuffer(payload[n_q:n_q + 4 * int(np.prod(sshape))],
+                          np.float32).reshape(sshape)
+        return np.asarray(kref.dequantize_blockwise(jnp.asarray(q),
+                                                    jnp.asarray(s)))
+    raise KeyError(name)
+
+
+def sample_cf_bytes(name: str, arr: np.ndarray, fraction: float = 0.05,
+                    seed: int = 0) -> float:
+    """SampleCF for data-dependent codecs (paper §2.2, verbatim): encode a
+    row sample, return estimated full compressed bytes."""
+    codec = CODECS[name]
+    flat = arr.reshape(-1, arr.shape[-1]) if arr.ndim > 1 else arr[None]
+    n = flat.shape[0]
+    rng = np.random.default_rng(seed)
+    take = max(1, int(n * fraction))
+    rows = rng.choice(n, size=take, replace=False)
+    payload, _ = encode(name, flat[np.sort(rows)])
+    sample_raw = flat[rows].nbytes
+    cf = len(payload) / max(sample_raw, 1)
+    return cf * arr.nbytes

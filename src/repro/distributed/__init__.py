@@ -1,0 +1,5 @@
+from .sharding import (activation_specs, param_specs, serve_state_specs,
+                       DistConfig)
+
+__all__ = ["activation_specs", "param_specs", "serve_state_specs",
+           "DistConfig"]

@@ -1,0 +1,237 @@
+"""Sharding rules: parameter + activation PartitionSpecs for every arch.
+
+Parallelism mapping (DESIGN.md §5):
+* DP   — batch over ("pod", "data") when both exist, else ("data",).
+* FSDP — parameter d_model/d_ff rows sharded over "data" (ZeRO-style); the
+         "pod" axis stays pure DP by default (gradient all-reduce across
+         pods) — configurable via DistConfig.fsdp_over_pod.
+* TP   — heads / ff / vocab / experts over "model".
+* EP   — MoE expert dim over "model".
+* SP   — long-context serving (batch smaller than the DP axes): KV-cache
+         sequence dim sharded over "data".
+
+Rules are PATH-BASED: a table keyed by parameter name (with its subtree
+context) gives the spec of the *base* (unstacked) array; leading scan-stack
+dims (layers / groups / per-group stacks) are prepended as None.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models import model as MD
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None       # set for the multi-pod mesh
+    fsdp: bool = True                    # shard params over data axis
+    fsdp_over_pod: bool = False          # ZeRO across pods too (beyond-paper)
+    # "tp": model axis = tensor parallel (baseline).
+    # "fsdp": NO tensor parallelism — the model axis joins data for pure
+    #         ZeRO-3 sharding (the train_4k hillclimb: kills the per-layer
+    #         activation all-reduces that dominate the collective term).
+    parallel_mode: str = "tp"
+    # shard the KV-cache SEQUENCE dim over the model axis instead of kv
+    # heads (decode hillclimb: removes the kv-head padding waste for
+    # GQA models with kv_heads < 16)
+    kv_seq_shard: bool = False
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        base = ((self.pod_axis,) if self.pod_axis else ()) + (self.data_axis,)
+        if self.parallel_mode == "fsdp":
+            return base + (self.model_axis,)
+        return base
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return self.model_axis if self.parallel_mode == "tp" else None
+
+    @property
+    def fsdp_axes(self):
+        if not self.fsdp:
+            return None
+        axes = [self.data_axis]
+        if self.fsdp_over_pod and self.pod_axis:
+            axes.insert(0, self.pod_axis)
+        if self.parallel_mode == "fsdp":
+            axes.append(self.model_axis)
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def _divisible(dim: int, mesh_axes, mesh) -> bool:
+    if mesh_axes is None:
+        return False
+    axes = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+# Base spec table: name -> builder(dist) returning a tuple spec for the
+# UNSTACKED parameter.  F = fsdp axes, T = model axis.
+def _base_rules(dist: DistConfig):
+    F, T = dist.fsdp_axes, dist.tp_axis
+    return {
+        # top level
+        "embed": (T, F),
+        "lm_head": (F, T),
+        # norms (any)
+        "scale": (None,),
+        "ln_scale": (None,),
+        # attention
+        "wq": (F, T, None),
+        "wk": (F, T, None),
+        "wv": (F, T, None),
+        "wo_attn": (T, None, F),
+        # dense mlp
+        "wi": (F, T),
+        "wg": (F, T),
+        "wo_mlp": (T, F),
+        # moe
+        "router": (F, None),
+        "moe_wi": (T, F, None),
+        "moe_wg": (T, F, None),
+        "moe_wo": (T, None, F),
+        # rwkv time-mix
+        "mu_x": (None,), "mu": (None, None),
+        "ts_w1": (F, None), "ts_w2": (None, None, F),
+        "w0": (None,), "w1": (F, None), "w2": (None, F),
+        "u": (T, None),
+        "rwkv_wr": (F, T), "rwkv_wk": (F, T), "rwkv_wv": (F, T),
+        "rwkv_wg": (F, T), "rwkv_wo": (T, F),
+        # rwkv channel-mix
+        "mu_k": (None,), "mu_r": (None,),
+        "cm_wk": (F, T), "cm_wv": (T, F), "cm_wr": (F, T),
+        # mamba
+        "in_proj": (F, T),
+        "conv_w": (None, T), "conv_b": (T,),
+        "x_proj": (T, None),
+        "dt_w": (None, T), "dt_b": (T,),
+        "a_log": (T, None), "d_skip": (T,),
+        "out_proj": (T, F),
+    }
+
+
+def _rule_key(path) -> str:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1]
+    ctx = names[-2] if len(names) >= 2 else ""
+    if name == "wo":
+        if ctx in ("attn",):
+            return "wo_attn"
+        if ctx == "moe":
+            return "moe_wo"
+        return "wo_mlp"
+    if ctx == "moe" and name in ("wi", "wg"):
+        return "moe_" + name
+    if ctx == "tm" and name in ("wr", "wk", "wv", "wg"):
+        return "rwkv_" + name
+    if ctx == "cm" and name in ("wk", "wv", "wr"):
+        return "cm_" + name
+    return name
+
+
+def param_specs(params_shape, cfg: ModelConfig, dist: DistConfig, mesh):
+    """PartitionSpec pytree matching the params pytree.
+
+    Any spec entry whose dim does not divide the mesh axes falls back to
+    None (replicated) — checked per-leaf so odd dims never break lowering.
+    """
+    rules = _base_rules(dist)
+
+    def spec_for(path, leaf):
+        key = _rule_key(path)
+        base = rules[key]
+        pad = leaf.ndim - len(base)
+        assert pad >= 0, f"{key}: leaf ndim {leaf.ndim} < base {len(base)}"
+        full = (None,) * pad + tuple(base)
+        safe = []
+        for dim, ax in zip(leaf.shape, full):
+            safe.append(ax if ax is not None and _divisible(dim, ax, mesh)
+                        else None)
+        return P(*safe)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def activation_specs(dist: DistConfig):
+    """Specs for (tokens, labels, embeds, logits, hidden)."""
+    dp = dist.dp_axes
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    return {
+        "tokens": P(dp_spec, None),
+        "labels": P(dp_spec, None),
+        "embeds": P(dp_spec, None, None),
+        "logits": P(dp_spec, None, dist.tp_axis),
+        "hidden": P(dp_spec, None, None),
+    }
+
+
+def serve_state_specs(state_shape, cfg: ModelConfig, dist: DistConfig, mesh,
+                      batch: int):
+    """Specs for the serving state (KV caches / SSM states).
+
+    If the batch divides the DP axes, shard batch over DP; otherwise (the
+    long_500k single-request cell) shard the KV **sequence** dim over "data"
+    (sequence parallelism) and leave batch unsharded.
+    """
+    dp = dist.dp_axes
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_sharded = batch % dp_size == 0
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    T = dist.tp_axis
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1]
+        if name == "pos":
+            spec = (dp_spec if batch_sharded else None,)
+            safe = [ax if ax is not None and _divisible(d, ax, mesh) else None
+                    for d, ax in zip(leaf.shape, spec)]
+            return P(*safe)
+        if names[0] == "kv":  # (L, B, S, KvH, Dh)
+            if dist.kv_seq_shard and dist.parallel_mode == "tp":
+                # seq over the model axis; kv heads UNSHARDED (no padding
+                # waste reads); batch over dp when divisible
+                spec = ((None, dp_spec if batch_sharded else None,
+                         dist.model_axis, None, None))
+            elif batch_sharded:
+                spec = (None, dp_spec, None, T, None)
+            else:
+                spec = (None, None, dist.data_axis, T, None)
+            safe = [ax if ax is not None and _divisible(d, ax, mesh) else None
+                    for d, ax in zip(leaf.shape, spec)]
+            return P(*safe)
+        if names[0] == "rwkv":
+            # tm/cm shift: (L,B,D); wkv: (L,B,H,hs,hs)
+            if name in ("tm_shift", "cm_shift"):
+                spec = (None, dp_spec if batch_sharded else None, None)
+            else:
+                spec = (None, dp_spec if batch_sharded else None, T, None,
+                        None)
+        elif names[0] == "mamba":
+            # conv: (G,M,B,K-1,Din); ssm: (G,M,B,Din,ds)
+            if name == "conv":
+                spec = (None, None, dp_spec if batch_sharded else None, None,
+                        T)
+            else:
+                spec = (None, None, dp_spec if batch_sharded else None, T,
+                        None)
+        else:
+            spec = (None,) * leaf.ndim
+        safe = [ax if ax is not None and _divisible(d, ax, mesh) else None
+                for d, ax in zip(leaf.shape, spec)]
+        return P(*safe)
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_shape)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compression hot-spots (compress / decompress /
+# decompress-on-read), each with a pure-jnp oracle in ref.py:
+#   quantize_blockwise.py — blockwise int8 quantize + dequantize kernels
+#   dequant_matmul.py     — fused int8-weight matmul (dequant in VMEM)
+#   ops.py                — jit'd wrappers (auto interpret=True on CPU)
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

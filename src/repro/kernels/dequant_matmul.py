@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused dequantize-matmul (decompress-on-read).
+
+    out (M, N) = a (M, K) @ dequant(qw (K, N) int8, scale (K/block, N))
+
+The int8 weight never materializes in HBM as floats: each grid step loads an
+(TK, TN) int8 tile into VMEM, dequantizes on the VPU, and feeds the MXU.
+This is the TPU rendering of the paper's A.2 rule — "decompress only the
+columns the query uses", fused into the consumer.
+
+Tiling: grid (M/TM, N/TN, K/TK), K innermost for accumulation; TK equals the
+quantization block so each k-step uses exactly one scale row.  MXU-aligned
+tiles (128 multiples).  VMEM/step: a 128KB + qw 32KB + acc 128KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import DEFAULT_BLOCK
+
+TILE_M = 256
+TILE_N = 256
+
+
+def _dequant_matmul_kernel(a_ref, qw_ref, s_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)              # (TM, TK)
+    w = qw_ref[...].astype(jnp.float32)             # (TK, TN)
+    w = w * s_ref[...]                              # scale row (1, TN)
+    acc_ref[...] += jax.lax.dot(a, w,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dequant_matmul(a: jnp.ndarray, qw: jnp.ndarray, scale: jnp.ndarray,
+                   block: int = DEFAULT_BLOCK, interpret: bool = False,
+                   tile_m: int = TILE_M, tile_n: int = TILE_N,
+                   out_dtype=jnp.float32) -> jnp.ndarray:
+    """a: (M, K); qw: (K, N) int8; scale: (K // block, N) f32."""
+    m, k = a.shape
+    k2, n = qw.shape
+    assert k == k2 and k % block == 0
+    assert scale.shape == (k // block, n), scale.shape
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    assert m % tile_m == 0 and n % tile_n == 0
+    n_k = k // block
+    grid = (m // tile_m, n // tile_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, tile_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), out_dtype)],
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        interpret=interpret,
+    )(a, qw, scale)[0]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference).
+
+Blockwise int8 quantization ("compression"): blocks of `block` consecutive
+elements along the last dim share one f32 scale = absmax/127.  This is the
+TPU-native analogue of the paper's page-local dictionary: the page becomes
+the quantization block, the dictionary becomes the scale.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 128
+Q_MAX = 127.0
+
+
+def _pad_last(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+def quantize_blockwise(x: jnp.ndarray, block: int = DEFAULT_BLOCK
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., N) -> (q int8 (..., N), scales f32 (..., ceil(N/block)))."""
+    xp, n = _pad_last(x.astype(jnp.float32), block)
+    shape = xp.shape[:-1] + (xp.shape[-1] // block, block)
+    blocks = xp.reshape(shape)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / Q_MAX
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -Q_MAX, Q_MAX)
+    q = q.astype(jnp.int8).reshape(xp.shape)[..., :n]
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blockwise(q: jnp.ndarray, scale: jnp.ndarray,
+                         block: int = DEFAULT_BLOCK,
+                         dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of quantize_blockwise."""
+    qp, n = _pad_last(q, block)
+    shape = qp.shape[:-1] + (qp.shape[-1] // block, block)
+    blocks = qp.reshape(shape).astype(jnp.float32)
+    out = blocks * scale[..., None]
+    return out.reshape(qp.shape)[..., :n].astype(dtype)
+
+
+def dequant_matmul(a: jnp.ndarray, qw: jnp.ndarray, scale: jnp.ndarray,
+                   block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """a (M, K) @ dequant(qw (K, N), scale (K/block, N)) -> (M, N) f32.
+
+    The weight stays int8 in memory; scales are per (K-block, output-col) —
+    dequantization happens inside the matmul ("decompress only what the
+    query reads", paper A.2).
+    """
+    k = qw.shape[0]
+    assert k % block == 0, "K must be a multiple of block"
+    w = qw.astype(jnp.float32).reshape(k // block, block, -1)
+    w = w * scale[:, None, :]
+    w = w.reshape(k, -1)
+    return a.astype(jnp.float32) @ w
+
+
+def quantize_kv(x: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """KV-cache quantization: same scheme over the head dim."""
+    return quantize_blockwise(x, block)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  with mesh:  jax.jit(step, in_shardings, out_shardings)
+  .lower(**input_specs).compile()  then record memory_analysis() (proves it
+fits), cost_analysis() (FLOPs/bytes for the roofline), and the collective
+schedule parsed from the optimized HLO.
+
+Results are written incrementally to results/dryrun/<arch>__<shape>__<mesh>
+.json so the full 80-cell sweep is resumable.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..distributed.sharding import activation_specs, param_specs
+from ..models import model as MD
+from ..models.config import pad_for_tp
+from ..optim import AdamWConfig, adamw_init
+from ..train.step import make_decode_step, make_prefill_step, make_train_step
+from . import roofline as RL
+from .mesh import dist_config, make_production_mesh
+from .specs import SHAPES, cell_supported, input_specs, model_shardings
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+TP = 16
+
+
+def _opt_state_shardings(params_shaped, opt_cfg, mesh, cfg, dist):
+    """Opt-state ShapeDtypeStructs with shardings derived from param specs."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state_shape = jax.eval_shape(lambda: adamw_init(params_shaped, opt_cfg))
+    pspecs = param_specs(params_shaped, cfg, dist, mesh)
+
+    def moment_spec(path, leaf):
+        # path: moments/<param path...>/<m|v|m_q|m_s|v_q|v_s>
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        if names[0] == "step":
+            return P()
+        name = names[-1]
+        # locate the param spec by stripping 'moments' and the moment name
+        sub = pspecs
+        for n in names[1:-1]:
+            sub = sub[n]
+        spec = tuple(sub)
+        if name.endswith("_s"):  # block scales: last dim replicated
+            spec = spec[:-1] + (None,) if spec else spec
+        # pad spec to leaf rank
+        spec = (None,) * (leaf.ndim - len(spec)) + spec[:leaf.ndim]
+        return P(*spec)
+
+    specs = jax.tree_util.tree_map_with_path(moment_spec, state_shape)
+    shaped = jax.tree.map(
+        lambda l, sp: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        state_shape, specs)
+    return shaped, specs
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             opt_codec: str = "f32", kv_dtype=jnp.bfloat16,
+             param_dtype=None, grad_compression=None,
+             variant: str = "baseline", parallel_mode: str = "tp",
+             kv_seq_shard: bool = False) -> dict:
+    # with seq-sharded KV the kv heads stay logical (no padding waste)
+    cfg = pad_for_tp(get_config(arch), TP, pad_kv=not kv_seq_shard)
+    info = SHAPES[shape]
+    ok, reason = cell_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "variant": variant, "status": "skipped", "reason": reason}
+    if not ok:
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = dist_config(multi_pod=multi_pod, parallel_mode=parallel_mode,
+                       kv_seq_shard=kv_seq_shard)
+    n_dev = mesh.size
+    kind = info["kind"]
+    if param_dtype is None:
+        param_dtype = jnp.float32 if kind == "train" else jnp.bfloat16
+
+    t0 = time.perf_counter()
+    with mesh:
+        params_shaped, pspecs = model_shardings(cfg, mesh, dist, param_dtype)
+        batch = input_specs(cfg, shape, mesh, dist, kv_dtype=kv_dtype)
+
+        act = activation_specs(dist)
+        act_specs = {"hidden": act["hidden"], "logits": act["logits"]}
+        if kind == "train":
+            opt_cfg = AdamWConfig(state_codec=opt_codec)
+            opt_shaped, _ = _opt_state_shardings(params_shaped, opt_cfg,
+                                                 mesh, cfg, dist)
+            step = make_train_step(cfg, opt_cfg, remat=True,
+                                   grad_compression=grad_compression,
+                                   act_specs=act_specs)
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shaped, opt_shaped, batch)
+        elif kind == "prefill":
+            step = make_prefill_step(cfg, act_specs=act_specs)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(params_shaped, batch)
+        else:  # decode
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step, donate_argnums=(1,))
+            lowered = jitted.lower(params_shaped, batch["state"],
+                                   batch["tokens"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits
+    ca = compiled.cost_analysis()
+    print({k: ca[k] for k in ("flops", "bytes accessed")
+           if k in ca})  # FLOPs/bytes for the roofline
+    hlo = compiled.as_text()
+    rl = RL.analyze(compiled, n_dev, hlo_text=hlo)
+    mf = RL.model_flops(cfg, info)
+
+    result.update({
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "param_count": cfg.param_count(),
+        "param_count_padded": cfg.param_count(padded=True),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": rl.summary(),
+        "collective_counts": rl.collectives,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / max(rl.flops_per_chip, 1.0),
+    })
+    return result
+
+
+def cell_name(arch, shape, multi_pod, variant="baseline"):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    v = "" if variant == "baseline" else f"__{variant}"
+    return f"{arch}__{shape}__{mesh_name}{v}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt-codec", default="f32", choices=["f32", "q8"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "i8sim"])
+    ap.add_argument("--grad-compression", default=None, choices=[None, "q8"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--parallel", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--kv-seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    kv_dtype = jnp.bfloat16 if args.kv_dtype == "bf16" else jnp.int8
+    failures = 0
+    for arch, shape, mp in cells:
+        name = cell_name(arch, shape, mp, args.variant)
+        out = RESULTS_DIR / f"{name}.json"
+        if out.exists() and not args.force:
+            print(f"[skip cached] {name}")
+            continue
+        print(f"[run] {name}", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp,
+                           opt_codec=args.opt_codec, kv_dtype=kv_dtype,
+                           grad_compression=args.grad_compression,
+                           variant=args.variant,
+                           parallel_mode=args.parallel,
+                           kv_seq_shard=args.kv_seq_shard)
+        except Exception as e:  # noqa: BLE001 — record, continue sweep
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "variant": args.variant, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        out.write_text(json.dumps(res, indent=2, default=str))
+        print(f"  -> {res['status']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..distributed.sharding import DistConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dist_config(*, multi_pod: bool = False, fsdp: bool = True,
+                fsdp_over_pod: bool = False, parallel_mode: str = "tp",
+                kv_seq_shard: bool = False) -> DistConfig:
+    return DistConfig(pod_axis="pod" if multi_pod else None, fsdp=fsdp,
+                      fsdp_over_pod=fsdp_over_pod,
+                      parallel_mode=parallel_mode, kv_seq_shard=kv_seq_shard)
+
+
+def make_smoke_mesh():
+    """1x1 mesh on the single CPU device (tests of the sharded code path)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,115 @@
+"""Roofline report: join dry-run artifacts with the analytic census.
+
+    PYTHONPATH=src python -m repro.launch.report
+
+Reads results/dryrun/*.json (memory_analysis + raw cost_analysis +
+HLO-parsed collective kinds), computes census-based roofline terms per
+cell, and writes results/roofline.json + a markdown table for
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from ..configs import ARCHS, get_config
+from ..models.config import pad_for_tp
+from .census import census
+from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+from .specs import SHAPES
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+V5E_HBM = 16e9
+
+
+def _advice(bottleneck: str, cell: Dict) -> str:
+    if bottleneck == "collective":
+        return ("overlap FSDP all-gathers with layer compute and compress "
+                "the gradient all-reduce (q8 wire)")
+    if bottleneck == "memory":
+        if cell["shape"].startswith(("decode", "long")):
+            return "quantize weights/KV (q8/q4) to cut HBM traffic"
+        return "recompute less (selective remat) or shrink activations"
+    return "increase per-chip arithmetic intensity (larger local batch)"
+
+
+def cell_report(arch: str, shape: str, mesh: str, dry: Optional[dict],
+                variant: str = "baseline", **census_kw) -> Dict:
+    cfg = pad_for_tp(get_config(arch), 16)
+    info = SHAPES[shape]
+    n_chips = 512 if mesh == "2x16x16" else 256
+    pod_dp = 2 if mesh == "2x16x16" else 1
+    c = census(cfg, info["kind"], info["batch"], info["seq"], n_chips,
+               tp=16, pod_dp=pod_dp, **census_kw)
+    t_c = c.flops / PEAK_FLOPS
+    t_m = c.hbm_bytes / HBM_BW
+    t_w = c.wire_bytes / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_w}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, info) / n_chips
+    t_bound = max(terms.values())
+    out = {
+        "arch": arch, "shape": shape, "mesh": mesh, "variant": variant,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_w,
+        "bottleneck": bottleneck,
+        "flops_per_chip": c.flops,
+        "hbm_bytes_per_chip": c.hbm_bytes,
+        "wire_bytes_per_chip": c.wire_bytes,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / max(c.flops, 1.0),
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(t_bound, 1e-12),
+        "advice": _advice(bottleneck, {"shape": shape}),
+    }
+    if dry is not None and dry.get("status") == "ok":
+        out["memory_temp_gb"] = dry["memory"]["temp_bytes"] / 1e9
+        out["memory_args_gb"] = (dry["memory"]["argument_bytes"] or 0) / 1e9
+        out["compile_s"] = dry.get("compile_s")
+        out["collective_kinds"] = dry.get("collective_counts", {})
+        out["raw_cost_analysis"] = {
+            "flops": dry["roofline"]["flops_per_chip"],
+            "bytes": dry["roofline"]["hbm_bytes_per_chip"],
+        }
+    return out
+
+
+def main() -> None:
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                f = RESULTS / "dryrun" / f"{arch}__{shape}__{mesh}.json"
+                dry = json.loads(f.read_text()) if f.exists() else None
+                if dry is not None and dry["status"] == "skipped":
+                    rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                                 "variant": "baseline", "status": "skipped",
+                                 "reason": dry["reason"]})
+                    continue
+                r = cell_report(arch, shape, mesh, dry)
+                r["status"] = "ok" if dry else "census-only"
+                rows.append(r)
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+
+    # markdown table (single-pod cells only, per the spec)
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | bound | "
+             "MF/HLO | roofline-frac | temp GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != "16x16":
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (sub-quadratic rule) | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f}ms "
+            f"| {r['t_memory_s']*1e3:.1f}ms | {r['t_collective_s']*1e3:.1f}ms "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} "
+            f"| {r.get('memory_temp_gb', float('nan')):.1f} |")
+    (RESULTS / "roofline_table.md").write_text("\n".join(lines))
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_wire_bytes / (chips * link_bw)
+
+Sources: compiled.cost_analysis() for FLOPs/bytes; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text and sum per-chip wire
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using ring-algorithm estimates:
+
+    all-gather      (g-1)/g * result_bytes        (recv per chip)
+    reduce-scatter  (g-1)   * result_bytes        (result is the shard)
+    all-reduce      2(g-1)/g * operand_bytes
+    all-to-all      (g-1)/g * result_bytes
+    collective-permute  result_bytes
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 0.125,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of 'bf16[2,3]{...}' or a tuple '(f32[2], f32[2])'."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [ngroups, group_size]
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes_per_chip: float = 0.0
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, b: float):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + b
+        self.wire_bytes_per_chip += b
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_start: set = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        # avoid double counting async -start/-done pairs: skip -done
+        if "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        b = _shape_bytes(shape_str)
+        if kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2 * b * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = b
+        stats.add(kind, wire)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    n_devices: int
+    collectives: Dict[str, int]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if terms overlap perfectly."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+        }
+
+
+def analyze(compiled, n_devices: int, hlo_text: Optional[str] = None
+            ) -> Roofline:
+    """Build roofline terms from a compiled executable.
+
+    cost_analysis() FLOPs/bytes on SPMD modules are per-device program
+    costs (the module is the per-device program).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    col = parse_collectives(text, n_devices)
+    return Roofline(flops_per_chip=flops, hbm_bytes_per_chip=bytes_accessed,
+                    wire_bytes_per_chip=col.wire_bytes_per_chip,
+                    n_devices=n_devices, collectives=dict(col.counts))
+
+
+def model_flops(cfg, shape_info: Dict, n_layers_active: Optional[int] = None
+                ) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens."""
+    n = cfg.param_count()
+    if cfg.moe is not None:
+        moe = cfg.moe
+        # active experts fraction of the MoE weights
+        e_all = moe.n_experts
+        moe_frac = moe.top_k / e_all
+        if cfg.hybrid is not None:
+            n_moe_layers = cfg.n_layers // 2
+        else:
+            n_moe_layers = cfg.n_layers // moe.every_k_layers
+        moe_params = n_moe_layers * (e_all * 3 * cfg.d_model
+                                     * moe.d_ff_expert)
+        n = n - moe_params + moe_params * moe_frac
+    kind = shape_info["kind"]
+    if kind == "train":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 2.0 * n * tokens
+    # decode: one token per request
+    return 2.0 * n * shape_info["batch"]

@@ -1,0 +1,103 @@
+"""Input shape cells + ShapeDtypeStruct stand-ins for the dry-run.
+
+The four assigned shape cells per LM architecture:
+
+    train_4k     seq 4096   global_batch 256   (training, lowers train_step)
+    prefill_32k  seq 32768  global_batch 32    (inference prefill)
+    decode_32k   KV 32768   global_batch 128   (one-token decode)
+    long_500k    KV 524288  global_batch 1     (long-context decode;
+                 SSM/hybrid only — full-attention archs are skipped)
+
+`input_specs` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input — no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (DistConfig, activation_specs, param_specs,
+                                    serve_state_specs)
+from ..models import model as MD
+from ..models.config import ModelConfig
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (shape-sheet rule)."""
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("skipped: pure full-attention arch; long_500k "
+                       "requires sub-quadratic sequence mixing "
+                       "(see DESIGN.md §6)")
+    return True, ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh, dist: DistConfig,
+                kv_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStructs (with shardings) for the cell's step-function
+    inputs.  For stub frontends (vlm/audio), precomputed patch/frame
+    embeddings replace token embeddings."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    act = activation_specs(dist)
+
+    def sh(spec):
+        return NamedSharding(mesh, spec)
+
+    if info["kind"] == "train":
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, sh(act["tokens"])),
+            "labels": _sds((b, s), jnp.int32, sh(act["labels"])),
+        }
+        if cfg.frontend != "tokens":
+            batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16,
+                                   sh(act["embeds"]))
+        return batch
+    if info["kind"] == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32, sh(act["tokens"]))}
+        if cfg.frontend != "tokens":
+            batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16,
+                                   sh(act["embeds"]))
+        return batch
+    # decode: one new token + serving state of length `seq`
+    state_shape = jax.eval_shape(
+        lambda: MD.init_serve_state(cfg, b, s, kv_dtype=kv_dtype))
+    specs = serve_state_specs(state_shape, cfg, dist, mesh, b)
+    state = jax.tree.map(lambda l, sp: _sds(l.shape, l.dtype, sh(sp)),
+                         state_shape, specs)
+    dp = dist.dp_axes
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = act["tokens"] if b % dp_size == 0 else P(None, None)
+    return {
+        "tokens": _sds((b, 1), jnp.int32, sh(tok_spec)),
+        "state": state,
+    }
+
+
+def model_shardings(cfg: ModelConfig, mesh, dist: DistConfig,
+                    param_dtype=jnp.bfloat16):
+    """(param ShapeDtypeStructs with shardings, spec pytree)."""
+    shapes = MD.params_shape(cfg, param_dtype)
+    specs = param_specs(shapes, cfg, dist, mesh)
+    shaped = jax.tree.map(
+        lambda l, sp: _sds(l.shape, l.dtype, NamedSharding(mesh, sp)),
+        shapes, specs)
+    return shaped, specs

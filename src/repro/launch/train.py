@@ -1,0 +1,42 @@
+"""Training launcher: --arch <id> selects any assigned architecture.
+
+On this CPU container it trains the reduced (smoke) variant of the chosen
+arch by default; --full uses the published config (for real hardware).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCHS, get_config, smoke_config
+from ..train.loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCHS)
+    ap.add_argument("--full", action="store_true",
+                    help="use the published config (needs real hardware)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--hbm-budget-gb", type=float, default=16.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else smoke_config(args.arch)
+    tc = TrainConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                     lr=args.lr, checkpoint_dir=args.checkpoint_dir,
+                     hbm_budget_bytes=args.hbm_budget_gb * 1e9)
+    print(f"[launch] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    trainer = Trainer(cfg, tc)
+    if trainer.plan is not None:
+        print(f"[launch] advisor layout: {trainer.plan.choices}")
+    out = trainer.run()
+    print(f"[launch] loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

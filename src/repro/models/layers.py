@@ -1,0 +1,371 @@
+"""Transformer layer library: norms, RoPE, GQA attention (train / chunked
+prefill / decode), SwiGLU & squared-ReLU MLPs, and capacity-based MoE.
+
+Pure-functional JAX: every block is (params pytree, inputs) -> outputs with
+explicit init_* functions, so `jax.eval_shape(init_*)` gives allocation-free
+parameter skeletons for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, MoEConfig
+
+Params = Dict[str, Any]
+NEG_INF = -1e9  # finite mask value: keeps bf16 softmax NaN-free
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def chunked_scan(step_fn, carry, xs, chunk: int):
+    """lax.scan over time in rematerialized chunks.
+
+    Saves only per-CHUNK carries for the backward pass (remat recomputes
+    within-chunk intermediates), turning O(S * state) residual memory into
+    O(S/chunk * state) — the standard memory policy for long-sequence
+    recurrences (WKV / selective SSM / online-softmax attention).
+
+    xs leaves are time-major (S, ...).  Falls back to a plain scan when S is
+    not a multiple of `chunk`.
+    """
+    s = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, s)
+    if s % chunk:
+        return lax.scan(step_fn, carry, xs)
+    n = s // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(c, xc):
+        return lax.scan(step_fn, c, xc)
+
+    carry, ys = lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(n * chunk, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # f32-ACCUMULATING reduction without materializing an f32 copy of x:
+    # a full-tensor convert at the top of a scanned body gets hoisted by
+    # XLA's loop-invariant code motion into an f32 copy of the whole remat
+    # stack (L,B,S,D) — catastrophic for training memory.
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    var = var / x.shape[-1]
+    inv = lax.rsqrt(var + eps)                       # (..., 1) f32
+    return (x * inv.astype(x.dtype)) * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (...,S,1,Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.heads, cfg.kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, nh, hd), dtype=dtype),
+        "wk": _init(ks[1], (d, nkv, hd), dtype=dtype),
+        "wv": _init(ks[2], (d, nkv, hd), dtype=dtype),
+        "wo": _init(ks[3], (nh, hd, d), scale=0.02 / math.sqrt(2 * cfg.n_layers),
+                    dtype=dtype),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,Kv,Dh) -> (B,S,Kv*groups,Dh) by repeating each kv head."""
+    if groups == 1:
+        return k
+    b, s, kv, dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, dh))
+    return k.reshape(b, s, kv * groups, dh)
+
+
+def attention_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal attention over the whole sequence (training / small prefill).
+
+    x: (B, S, D) -> (B, S, D)
+    """
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.heads, cfg.kv_heads, cfg.d_head
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, nh // nkv)
+    v = _repeat_kv(v, nh // nkv)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(causal[None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    return jnp.einsum("bqhk,hkd->bqd", ctx, p["wo"])
+
+
+def attention_chunked(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      q_chunk: int = 1024, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Memory-efficient causal attention (online softmax over KV chunks).
+
+    O(q_chunk * kv_chunk) score memory — required for 32k+ prefill.
+    """
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.heads, cfg.kv_heads, cfg.d_head
+    positions = jnp.arange(s)[None, :]
+    q = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), positions,
+                   cfg.rope_theta)
+    k = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), positions,
+                   cfg.rope_theta)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    k = _repeat_kv(k, nh // nkv)
+    v = _repeat_kv(v, nh // nkv)
+
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    n_q, n_kv = s // q_chunk, s // kv_chunk
+    qr = q.reshape(b, n_q, q_chunk, nh, hd)
+
+    def per_q_chunk(qi, q_blk):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = lax.dynamic_slice_in_dim(k, kj * kv_chunk, kv_chunk, 1)
+            v_blk = lax.dynamic_slice_in_dim(v, kj * kv_chunk, kv_chunk, 1)
+            sc = jnp.einsum("bqhk,bshk->bhqs", q_blk, k_blk) / math.sqrt(hd)
+            kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            sc = jnp.where(mask[None, None], sc.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            probs = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + probs.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", probs.astype(x.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nh, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nh, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, nh, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_kv))
+        ctx = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(x.dtype)
+        return ctx.transpose(0, 2, 1, 3)  # (B,q_chunk,H,Dh)
+
+    ctx = lax.map(lambda args: per_q_chunk(*args),
+                  (jnp.arange(n_q), qr.transpose(1, 0, 2, 3, 4)))
+    ctx = ctx.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+    return jnp.einsum("bqhk,hkd->bqd", ctx, p["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int, dtype=jnp.bfloat16) -> Params:
+    nkv, hd = cfg.kv_heads, cfg.d_head
+    shape = (n_layers, batch, max_len, nkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode with a KV cache and PER-SLOT positions.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S_max, Kv, Dh); pos: (B,) int32 —
+    each batch slot's current length (slot-based continuous batching).
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    b, _, d = x.shape
+    nh, nkv, hd = cfg.heads, cfg.kv_heads, cfg.d_head
+    s_max = k_cache.shape[1]
+    positions = pos[:, None].astype(jnp.int32)           # (B, 1)
+    q = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), positions,
+                   cfg.rope_theta)
+    k = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), positions,
+                   cfg.rope_theta)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype),
+                                        mode="drop")
+    v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype),
+                                        mode="drop")
+    kk = _repeat_kv(k_cache.astype(x.dtype), nh // nkv)
+    vv = _repeat_kv(v_cache.astype(x.dtype), nh // nkv)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, kk) / math.sqrt(hd)
+    valid = (jnp.arange(s_max)[None, :] <= pos[:, None])  # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+    out = jnp.einsum("bqhk,hkd->bqd", ctx, p["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"wi": _init(ks[0], (d, f), dtype=dtype),
+                "wg": _init(ks[1], (d, f), dtype=dtype),
+                "wo": _init(ks[2], (f, d), dtype=dtype)}
+    return {"wi": _init(ks[0], (d, f), dtype=dtype),
+            "wo": _init(ks[2], (f, d), dtype=dtype)}
+
+
+def mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:  # squared ReLU (nemotron)
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    return h @ p["wo"]
+
+
+# --- quantized-weight MLP (serving): the advisor's "q8 weights" choice ----
+
+def quantize_mlp(p: Params, block: int = 128) -> Params:
+    """Compress MLP weights to int8 (keeps the (K/block, N) scale layout
+    the fused dequant-matmul kernel expects)."""
+    from ..kernels import ref as kref
+
+    def q(w):  # w: (K, N) -> qw (K, N) int8, scales (K/block, N)
+        qw, s = kref.quantize_blockwise(jnp.asarray(w, jnp.float32).T, block)
+        return {"q": qw.T, "s": s.T}
+
+    return {k: q(v) for k, v in p.items()}
+
+
+def mlp_quantized(pq: Params, x: jnp.ndarray, kind: str,
+                  block: int = 128, use_pallas: bool = False) -> jnp.ndarray:
+    """MLP forward with int8 weights, dequantized inside the matmul
+    (kernels/dequant_matmul on TPU; ref path under jit elsewhere).  The
+    weights never materialize in floating point in HBM — SQL Server's
+    "decompress only what the query reads" (paper A.2), fused."""
+    from ..kernels import ops as kops
+    from ..kernels import ref as kref
+
+    mm = (lambda a, w: kops.dequant_matmul(a, w["q"], w["s"], block)) \
+        if use_pallas else \
+        (lambda a, w: kref.dequant_matmul(a, w["q"], w["s"], block))
+    lead = x.shape[:-1]
+    a = x.reshape(-1, x.shape[-1])
+    if kind == "swiglu":
+        h = jax.nn.silu(mm(a, pq["wg"])) * mm(a, pq["wi"])
+    else:
+        h = jnp.square(jax.nn.relu(mm(a, pq["wi"])))
+    out = mm(h.astype(x.dtype), pq["wo"])
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based dispatch, GShard-style but scatter-based)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    moe = cfg.moe
+    assert moe is not None
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d, e), dtype=jnp.float32),
+        "wi": _init(ks[1], (e, d, f), dtype=dtype),
+        "wg": _init(ks[2], (e, d, f), dtype=dtype),
+        "wo": _init(ks[3], (e, f, d), dtype=dtype),
+    }
+
+
+def moe_mlp(p: Params, x: jnp.ndarray, moe: MoEConfig) -> jnp.ndarray:
+    """Top-k routed MoE with expert-capacity dispatch.
+
+    x: (B, S, D).  Tokens flatten to T=B*S; each picks top_k experts; each
+    expert processes at most C = ceil(T * k * cf / E) tokens (overflow is
+    dropped, standard GShard semantics).  Dummy padded experts are masked
+    out of the router softmax (function-preserving).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.experts, moe.top_k
+    cap = int(math.ceil(t * k * moe.capacity_factor / e))
+    cap = max(cap, 1)
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    if moe.n_experts_padded and moe.n_experts_padded > moe.n_experts:
+        pad_mask = jnp.arange(e) < moe.n_experts
+        logits = jnp.where(pad_mask[None, :], logits, NEG_INF)
+    gates, expert_idx = lax.top_k(logits, k)                  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)                    # renormalize
+
+    # position of each (token, slot) within its expert, via cumsum over the
+    # flattened (k*T) one-hot assignment — deterministic priority ordering.
+    flat_e = expert_idx.T.reshape(-1)                         # (k*T,) slot-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (k*T, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                 # (k*T, E)
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    flat_gate = gates.T.reshape(-1) * keep
+
+    # dispatch: scatter tokens into (E, C, D)
+    tok_idx = jnp.tile(jnp.arange(t), k)
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    contrib = xt[tok_idx] * keep[:, None].astype(x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(contrib, mode="drop")
+
+    # expert computation (E-sharded einsums)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    hi = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    h = jax.nn.silu(h) * hi
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])            # (E, C, D)
+
+    # combine: gather each slot's result, weight by gate, sum over k slots
+    gathered = out_e[flat_e, safe_pos]                        # (k*T, D)
+    weighted = gathered * flat_gate[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok_idx].add(weighted, mode="drop")
+    return out.reshape(b, s, d)

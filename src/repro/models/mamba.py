@@ -1,0 +1,110 @@
+"""Mamba-1 selective SSM block (the Jamba hybrid's sequence mixer).
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t      (per channel)
+    y_t = C_t . h_t + D x_t
+
+with input-dependent dt (softplus), B, C.  Serving state per layer:
+conv ring buffer (B, d_conv-1, d_in) + SSM state (B, d_in, d_state) —
+O(1) in sequence length (the long_500k cell relies on this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import HybridConfig, ModelConfig
+from .layers import _init
+
+Params = Dict[str, Any]
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return (cfg.hybrid or HybridConfig()).expand * cfg.d_model
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    h = cfg.hybrid or HybridConfig()
+    d, din, dr, ds = cfg.d_model, d_inner(cfg), dt_rank(cfg), h.d_state
+    ks = jax.random.split(key, 7)
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (din, ds))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * din), dtype=dtype),
+        "conv_w": _init(ks[1], (h.d_conv, din), 0.2, dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": _init(ks[2], (din, dr + 2 * ds), dtype=dtype),
+        "dt_w": _init(ks[3], (dr, din), dtype=dtype),
+        "dt_b": jnp.full((din,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((din,), dtype),
+        "out_proj": _init(ks[6], (din, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time.  x: (B,S,Din); w: (K,Din);
+    prev: (B,K-1,Din) carry-in.  Returns (out, new_prev)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B,S+K-1,Din)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return out, xp[:, -(k - 1):] if k > 1 else prev
+
+
+def mamba_sequence(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D); conv_state: (B,K-1,Din); ssm_state: (B,Din,ds) f32.
+
+    Returns (out (B,S,D), new_conv_state, new_ssm_state)."""
+    h = cfg.hybrid or HybridConfig()
+    b, s, d = x.shape
+    din, dr, ds = d_inner(cfg), dt_rank(cfg), h.d_state
+
+    xz = x @ p["in_proj"]                               # (B,S,2*Din)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ p["x_proj"]                             # (B,S,dr+2ds)
+    dt, bb, cc = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_w"] + p["dt_b"])    # (B,S,Din)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (Din,ds)
+
+    dt32 = dt.astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * a)                   # (B,S,Din,ds)
+    dbx = (dt32 * xs.astype(jnp.float32))[..., None] \
+        * bb.astype(jnp.float32)[..., None, :]          # (B,S,Din,ds)
+
+    def step(hst, inputs):
+        da_t, dbx_t, c_t = inputs                       # (B,Din,ds)x2,(B,ds)
+        hst = da_t * hst + dbx_t
+        y = jnp.einsum("bds,bs->bd", hst, c_t)
+        return hst, y
+
+    from .layers import chunked_scan
+    xs_t = (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3),
+            cc.astype(jnp.float32).transpose(1, 0, 2))
+    ssm_state, ys = chunked_scan(step, ssm_state.astype(jnp.float32), xs_t,
+                                 chunk=128)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)           # (B,S,Din)
+    y = y + xs * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], conv_state, ssm_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.float32) -> Params:
+    h = cfg.hybrid or HybridConfig()
+    din = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((n_layers, batch, h.d_conv - 1, din), dtype),
+        "ssm": jnp.zeros((n_layers, batch, din, h.d_state), jnp.float32),
+    }

@@ -1,0 +1,413 @@
+"""Model assembly: embedding -> scanned layer stack -> head.
+
+Two assemblies cover all 10 assigned architectures:
+
+* UniformLM — homogeneous layers scanned with lax.scan: dense GQA
+  transformers, MoE transformers (MoE MLP every layer), and RWKV6.
+* HybridLM  — Jamba-style groups scanned with lax.scan: each group is
+  7 Mamba blocks + 1 attention block, MoE on even in-group positions
+  (=> 36/72 MoE layers, matching the published 398B total).
+
+All entry points work on ShapeDtypeStructs via jax.eval_shape for the
+multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import mamba as M
+from . import rwkv as R
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+# lax.scan unroll factor for the layer stack; census-validation tests set
+# this to the full depth so cost_analysis sees no while loops.
+SCAN_UNROLL = 1
+
+
+def is_hybrid(cfg: ModelConfig) -> bool:
+    return cfg.hybrid is not None
+
+
+def is_rwkv(cfg: ModelConfig) -> bool:
+    return cfg.mixer == "rwkv6"
+
+
+def _uses_moe(cfg: ModelConfig, layer_pos: int) -> bool:
+    if cfg.moe is None:
+        return False
+    k = cfg.moe.every_k_layers
+    return layer_pos % k == k - 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (eval_shape-able)
+# ---------------------------------------------------------------------------
+
+def _init_uniform_layer(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": L.init_rmsnorm(cfg.d_model, dtype),
+                 "norm2": L.init_rmsnorm(cfg.d_model, dtype)}
+    if is_rwkv(cfg):
+        p["rwkv"] = R.init_rwkv_block(ks[0], cfg, dtype)
+        return p
+    p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def _init_group(key, cfg: ModelConfig, dtype) -> Params:
+    g = cfg.hybrid
+    n_mamba = g.group_size - 1
+    ks = jax.random.split(key, 8)
+    mamba = jax.vmap(lambda k: M.init_mamba_block(k, cfg, dtype))(
+        jax.random.split(ks[0], n_mamba))
+    mamba_norm = jax.vmap(lambda k: L.init_rmsnorm(cfg.d_model, dtype))(
+        jax.random.split(ks[1], n_mamba))
+    n_moe = g.group_size // 2
+    n_mlp = g.group_size - n_moe
+    return {
+        "mamba": mamba,
+        "mamba_norm": mamba_norm,
+        "attn": L.init_attention(ks[2], cfg, dtype),
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "moe": jax.vmap(lambda k: L.init_moe(k, cfg, dtype))(
+            jax.random.split(ks[3], n_moe)),
+        "moe_norm": jax.vmap(lambda k: L.init_rmsnorm(cfg.d_model, dtype))(
+            jax.random.split(ks[4], n_moe)),
+        "mlp": jax.vmap(lambda k: L.init_mlp(k, cfg, dtype))(
+            jax.random.split(ks[5], n_mlp)),
+        "mlp_norm": jax.vmap(lambda k: L.init_rmsnorm(cfg.d_model, dtype))(
+            jax.random.split(ks[6], n_mlp)),
+    }
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    p: Params = {
+        "embed": L._init(k_embed, (cfg.vocab_p, cfg.d_model), dtype=dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._init(k_head, (cfg.d_model, cfg.vocab_p), dtype=dtype)
+    if is_hybrid(cfg):
+        n_groups = cfg.n_layers // cfg.hybrid.group_size
+        p["groups"] = jax.vmap(lambda k: _init_group(k, cfg, dtype))(
+            jax.random.split(k_layers, n_groups))
+    else:
+        p["layers"] = jax.vmap(lambda k: _init_uniform_layer(k, cfg, dtype))(
+            jax.random.split(k_layers, cfg.n_layers))
+    return p
+
+
+def params_shape(cfg: ModelConfig, dtype=jnp.float32):
+    """Allocation-free parameter skeleton for the dry-run."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_input(params, cfg, tokens, embeds):
+    if embeds is not None:
+        return embeds
+    return params["embed"][tokens]
+
+
+def _head(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["lm_head"]
+    return logits
+
+
+def _mlp_branch(lp, h, cfg):
+    if cfg.moe is not None:
+        return L.moe_mlp(lp["moe"], h, cfg.moe)
+    return L.mlp(lp["mlp"], h, cfg.mlp)
+
+
+def _group_forward(gp: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   states: Optional[Params], attn_impl: str):
+    """One hybrid group over a full sequence.  states (per group slice):
+    {"conv": (7,B,K-1,Din), "ssm": (7,B,Din,ds)} or None (zeros)."""
+    g = cfg.hybrid
+    b = x.shape[0]
+    new_conv, new_ssm = [], []
+    moe_i = mlp_i = 0
+    for pos in range(g.group_size):
+        if pos == g.group_size - 1:   # attention position
+            h = L.rmsnorm(gp["attn_norm"], x, cfg.norm_eps)
+            if attn_impl == "chunked":
+                x = x + L.attention_chunked(gp["attn"], h, cfg)
+            else:
+                x = x + L.attention_full(gp["attn"], h, cfg)
+        else:
+            i = pos
+            lp = jax.tree.map(lambda a: a[i], gp["mamba"])
+            npm = jax.tree.map(lambda a: a[i], gp["mamba_norm"])
+            h = L.rmsnorm(npm, x, cfg.norm_eps)
+            if states is None:
+                conv0 = jnp.zeros((b, g.d_conv - 1, M.d_inner(cfg)), x.dtype)
+                ssm0 = jnp.zeros((b, M.d_inner(cfg), g.d_state), jnp.float32)
+            else:
+                conv0, ssm0 = states["conv"][i], states["ssm"][i]
+            out, c1, s1 = M.mamba_sequence(lp, h, cfg, conv0, ssm0)
+            x = x + out
+            new_conv.append(c1)
+            new_ssm.append(s1)
+        if pos % 2 == 0:              # MoE position
+            mp = jax.tree.map(lambda a, i=moe_i: a[i], gp["moe"])
+            mn = jax.tree.map(lambda a, i=moe_i: a[i], gp["moe_norm"])
+            h = L.rmsnorm(mn, x, cfg.norm_eps)
+            x = x + L.moe_mlp(mp, h, cfg.moe)
+            moe_i += 1
+        else:
+            mp = jax.tree.map(lambda a, i=mlp_i: a[i], gp["mlp"])
+            mn = jax.tree.map(lambda a, i=mlp_i: a[i], gp["mlp_norm"])
+            h = L.rmsnorm(mn, x, cfg.norm_eps)
+            x = x + L.mlp(mp, h, cfg.mlp)
+            mlp_i += 1
+    new_states = {"conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm)}
+    return x, new_states
+
+
+def forward(params: Params, cfg: ModelConfig,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            attn_impl: str = "full", remat: bool = False,
+            act_specs: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, vocab_p).
+
+    `remat=True` checkpoints each scanned layer (training memory policy).
+    `act_specs` pins activation shardings (with_sharding_constraint) so
+    GSPMD never loses the batch sharding through the embed gather — pass
+    {"hidden": PartitionSpec, "logits": PartitionSpec}.
+    """
+
+    def constrain(t, key="hidden"):
+        if act_specs is not None and key in act_specs:
+            return jax.lax.with_sharding_constraint(t, act_specs[key])
+        return t
+
+    def barrier(t):
+        # defeat XLA loop-invariant code motion: without this, a
+        # convert(dynamic-slice(remat_stack)) in the backward while-loop is
+        # rewritten to dynamic-slice(convert(remat_stack)), materializing an
+        # f32 copy of the ENTIRE (L,B,S,D) residual stack.
+        return lax.optimization_barrier(t) if remat else t
+
+    x = constrain(_embed_input(params, cfg, tokens, embeds))
+    b = x.shape[0]
+
+    def _maybe_remat(f):
+        return jax.checkpoint(f) if remat else f
+
+    if is_hybrid(cfg):
+        @_maybe_remat
+        def body(xc, gp):
+            xc = barrier(xc)
+            xc, _ = _group_forward(gp, xc, cfg, None, attn_impl)
+            return constrain(xc), None
+        x, _ = lax.scan(body, x, params["groups"], unroll=SCAN_UNROLL)
+    elif is_rwkv(cfg):
+        d = cfg.d_model
+        r = cfg.rwkv or R.RWKVConfig()
+        nh = d // r.head_size
+
+        @_maybe_remat
+        def body(xc, lp):
+            xc = barrier(xc)
+            st = {"tm_shift": jnp.zeros((b, d), xc.dtype),
+                  "cm_shift": jnp.zeros((b, d), xc.dtype),
+                  "wkv": jnp.zeros((b, nh, r.head_size, r.head_size),
+                                   jnp.float32)}
+            xc, _ = R.rwkv_block(lp["rwkv"], xc, cfg, st, lp["norm1"],
+                                 lp["norm2"],
+                                 partial(L.rmsnorm, eps=cfg.norm_eps))
+            return constrain(xc), None
+        x, _ = lax.scan(body, x, params["layers"], unroll=SCAN_UNROLL)
+    else:
+        @_maybe_remat
+        def body(xc, lp):
+            xc = barrier(xc)
+            h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+            if attn_impl == "chunked":
+                xc = xc + L.attention_chunked(lp["attn"], h, cfg)
+            else:
+                xc = xc + L.attention_full(lp["attn"], h, cfg)
+            h = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+            xc = xc + _mlp_branch(lp, h, cfg)
+            return constrain(xc), None
+        x, _ = lax.scan(body, x, params["layers"], unroll=SCAN_UNROLL)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return constrain(_head(params, cfg, x), "logits")
+
+
+# ---------------------------------------------------------------------------
+# Serving state + decode step
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
+                     kv_dtype=jnp.bfloat16) -> Params:
+    # pos is PER-SLOT (B,): slot-based continuous batching (vLLM-style)
+    state: Params = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if is_hybrid(cfg):
+        g = cfg.hybrid
+        n_groups = cfg.n_layers // g.group_size
+        n_mamba = g.group_size - 1
+        state["kv"] = L.init_kv_cache(cfg, batch, max_len, n_groups, kv_dtype)
+        state["mamba"] = {
+            "conv": jnp.zeros((n_groups, n_mamba, batch, g.d_conv - 1,
+                               M.d_inner(cfg)), jnp.float32),
+            "ssm": jnp.zeros((n_groups, n_mamba, batch, M.d_inner(cfg),
+                              g.d_state), jnp.float32),
+        }
+    elif is_rwkv(cfg):
+        state["rwkv"] = R.init_rwkv_state(cfg, batch, cfg.n_layers)
+    else:
+        state["kv"] = L.init_kv_cache(cfg, batch, max_len, cfg.n_layers,
+                                      kv_dtype)
+    return state
+
+
+def decode_step(params: Params, state: Params, cfg: ModelConfig,
+                tokens: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode.  tokens: (B, 1) -> logits (B, 1, vocab_p).
+
+    `active` (B,) bool marks slots whose position should advance (inactive
+    slots' cache writes land at their current pos and are overwritten when
+    the slot is reused; their outputs must be ignored by the caller)."""
+    x = _embed_input(params, cfg, tokens, None)
+    pos = state["pos"]
+    if active is None:
+        adv = jnp.ones_like(pos)
+    else:
+        adv = active.astype(pos.dtype)
+    new_state: Params = {"pos": pos + adv}
+
+    if is_hybrid(cfg):
+        g = cfg.hybrid
+
+        def body(xc, inp):
+            gp, kc, vc, conv, ssm = inp
+            sts = {"conv": conv, "ssm": ssm}
+            # decode = sequence of length 1 through the group, with KV cache
+            # for the attention position
+            b = xc.shape[0]
+            new_conv, new_ssm = [], []
+            moe_i = mlp_i = 0
+            for p_ in range(g.group_size):
+                if p_ == g.group_size - 1:
+                    h = L.rmsnorm(gp["attn_norm"], xc, cfg.norm_eps)
+                    att, kc, vc = L.attention_decode(gp["attn"], h, cfg, kc,
+                                                     vc, pos)
+                    xc = xc + att
+                else:
+                    lp = jax.tree.map(lambda a, i=p_: a[i], gp["mamba"])
+                    npm = jax.tree.map(lambda a, i=p_: a[i], gp["mamba_norm"])
+                    h = L.rmsnorm(npm, xc, cfg.norm_eps)
+                    out, c1, s1 = M.mamba_sequence(
+                        lp, h, cfg, sts["conv"][p_].astype(xc.dtype),
+                        sts["ssm"][p_])
+                    xc = xc + out
+                    new_conv.append(c1.astype(jnp.float32))
+                    new_ssm.append(s1)
+                if p_ % 2 == 0:
+                    mp = jax.tree.map(lambda a, i=moe_i: a[i], gp["moe"])
+                    mn = jax.tree.map(lambda a, i=moe_i: a[i], gp["moe_norm"])
+                    h = L.rmsnorm(mn, xc, cfg.norm_eps)
+                    xc = xc + L.moe_mlp(mp, h, cfg.moe)
+                    moe_i += 1
+                else:
+                    mp = jax.tree.map(lambda a, i=mlp_i: a[i], gp["mlp"])
+                    mn = jax.tree.map(lambda a, i=mlp_i: a[i], gp["mlp_norm"])
+                    h = L.rmsnorm(mn, xc, cfg.norm_eps)
+                    xc = xc + L.mlp(mp, h, cfg.mlp)
+                    mlp_i += 1
+            return xc, (kc, vc, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+        x, (k2, v2, conv2, ssm2) = lax.scan(
+            body, x, (params["groups"], state["kv"]["k"], state["kv"]["v"],
+                      state["mamba"]["conv"], state["mamba"]["ssm"]))
+        new_state["kv"] = {"k": k2, "v": v2}
+        new_state["mamba"] = {"conv": conv2, "ssm": ssm2}
+
+    elif is_rwkv(cfg):
+        def body(xc, inp):
+            lp, tm_s, cm_s, wkv = inp
+            st = {"tm_shift": tm_s, "cm_shift": cm_s, "wkv": wkv}
+            xc, st2 = R.rwkv_block(lp["rwkv"], xc, cfg, st, lp["norm1"],
+                                   lp["norm2"],
+                                   partial(L.rmsnorm, eps=cfg.norm_eps))
+            return xc, (st2["tm_shift"], st2["cm_shift"], st2["wkv"])
+
+        rs = state["rwkv"]
+        x, (tm2, cm2, wkv2) = lax.scan(
+            body, x, (params["layers"], rs["tm_shift"], rs["cm_shift"],
+                      rs["wkv"]))
+        new_state["rwkv"] = {"tm_shift": tm2, "cm_shift": cm2, "wkv": wkv2}
+
+    else:
+        def body(xc, inp):
+            lp, kc, vc = inp
+            h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+            att, kc, vc = L.attention_decode(lp["attn"], h, cfg, kc, vc, pos)
+            xc = xc + att
+            h = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+            xc = xc + _mlp_branch(lp, h, cfg)
+            return xc, (kc, vc)
+
+        x, (k2, v2) = lax.scan(body, x, (params["layers"], state["kv"]["k"],
+                                         state["kv"]["v"]))
+        new_state["kv"] = {"k": k2, "v": v2}
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, cfg, x), new_state
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, embeds: Optional[jnp.ndarray] = None,
+            remat: bool = False, attn_impl: str = "full",
+            act_specs=None) -> jnp.ndarray:
+    """Causal LM loss; padded vocab entries are masked out of the softmax."""
+    logits = forward(params, cfg, tokens=tokens, embeds=embeds, remat=remat,
+                     attn_impl=attn_impl, act_specs=act_specs)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_p != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_p) < cfg.vocab
+        logits = jnp.where(mask, logits, L.NEG_INF)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def reset_slot(state: Params, cfg: ModelConfig, slot: int) -> Params:
+    """Zero one batch slot\'s serving state (slot reuse in the engine)."""
+    out = dict(state)
+    out["pos"] = state["pos"].at[slot].set(0)
+    if "rwkv" in state:
+        rs = state["rwkv"]
+        out["rwkv"] = {k: v.at[:, slot].set(0) for k, v in rs.items()}
+    if "mamba" in state:
+        ms = state["mamba"]
+        out["mamba"] = {k: v.at[:, :, slot].set(0) for k, v in ms.items()}
+    # attention KV needs no reset: the per-slot pos mask hides stale entries
+    return out

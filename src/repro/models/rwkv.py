@@ -1,0 +1,165 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus squared-ReLU channel mixing.
+
+Recurrence per head (head size hs, state S in R^{hs x hs}):
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(w0 + lora_w(ddlerp_w(x_t, x_{t-1})))) in (0,1) —
+the data-dependent decay that distinguishes RWKV6 from RWKV4/5.
+
+Serving state per layer: (tm_shift (B,D), cm_shift (B,D), S (B,H,hs,hs)) —
+O(1) in sequence length, which is why the long_500k cell runs for this arch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, RWKVConfig
+from .layers import _init
+
+Params = Dict[str, Any]
+MIX_CHANNELS = 5  # w, k, v, r, g
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    r = cfg.rwkv or RWKVConfig()
+    hs = r.head_size
+    nh = d // hs
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            # token-shift ddlerp: base mixes + low-rank data-dependent part
+            "mu_x": _init(ks[0], (d,), 0.5, dtype),
+            "mu": _init(ks[1], (MIX_CHANNELS, d), 0.5, dtype),
+            "ts_w1": _init(ks[2], (d, MIX_CHANNELS * 32), dtype=dtype),
+            "ts_w2": _init(ks[3], (MIX_CHANNELS, 32, d), dtype=dtype),
+            # data-dependent decay LoRA
+            "w0": _init(ks[4], (d,), 0.5, dtype),
+            "w1": _init(ks[5], (d, r.decay_lora), dtype=dtype),
+            "w2": _init(ks[6], (r.decay_lora, d), dtype=dtype),
+            "u": _init(ks[7], (nh, hs), 0.5, dtype),
+            "wr": _init(ks[8], (d, d), dtype=dtype),
+            "wk": _init(ks[9], (d, d), dtype=dtype),
+            "wv": _init(ks[10], (d, d), dtype=dtype),
+            "wg": _init(ks[11], (d, d), dtype=dtype),
+            "wo": _init(jax.random.fold_in(key, 101), (d, d), dtype=dtype),
+            "ln_scale": jnp.ones((d,), dtype),  # per-head group norm
+        },
+        "cm": {
+            "mu_k": _init(jax.random.fold_in(key, 102), (d,), 0.5, dtype),
+            "mu_r": _init(jax.random.fold_in(key, 103), (d,), 0.5, dtype),
+            "wk": _init(jax.random.fold_in(key, 104), (d, cfg.d_ff), dtype=dtype),
+            "wv": _init(jax.random.fold_in(key, 105), (cfg.d_ff, d), dtype=dtype),
+            "wr": _init(jax.random.fold_in(key, 106), (d, d), dtype=dtype),
+        },
+    }
+
+
+def _ddlerp(tm: Params, x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent lerp of RWKV6: returns (C=5, ..., D) mixed inputs."""
+    xx = x_prev - x
+    xxx = x + xx * tm["mu_x"]
+    lora = jnp.tanh(xxx @ tm["ts_w1"])                  # (..., 5*32)
+    lora = lora.reshape(*lora.shape[:-1], MIX_CHANNELS, 32)
+    dd = jnp.einsum("...cr,crd->c...d", lora, tm["ts_w2"])  # (5, ..., D)
+    mu = tm["mu"].reshape((MIX_CHANNELS,) + (1,) * (x.ndim - 1) + (-1,))
+    return x[None] + xx[None] * (mu + dd)
+
+
+def _decay(tm: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    w_log = tm["w0"] + jnp.tanh(xw @ tm["w1"]) @ tm["w2"]
+    return jnp.exp(-jnp.exp(w_log.astype(jnp.float32)))   # (0,1)
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head layernorm of the WKV output. y: (..., H, hs)."""
+    mean = y.mean(axis=-1, keepdims=True)
+    var = y.var(axis=-1, keepdims=True)
+    out = (y - mean) * lax.rsqrt(var + eps)
+    return out.reshape(*y.shape[:-2], -1) * scale
+
+
+def time_mix_sequence(tm: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      tm_shift: jnp.ndarray, wkv: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D); tm_shift: (B,D) last token of the previous chunk;
+    wkv: (B,H,hs,hs).  Returns (out, new_shift, new_wkv)."""
+    b, s, d = x.shape
+    r_cfg = cfg.rwkv or RWKVConfig()
+    hs = r_cfg.head_size
+    nh = d // hs
+    x_prev = jnp.concatenate([tm_shift.astype(x.dtype)[:, None], x[:, :-1]],
+                             axis=1)
+    mixed = _ddlerp(tm, x, x_prev)                       # (5,B,S,D)
+    xw, xk, xv, xr, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+    w = _decay(tm, xw).reshape(b, s, nh, hs)             # (B,S,H,hs) f32
+    k = (xk @ tm["wk"]).reshape(b, s, nh, hs)
+    v = (xv @ tm["wv"]).reshape(b, s, nh, hs)
+    r = (xr @ tm["wr"]).reshape(b, s, nh, hs)
+    g = jax.nn.silu(xg @ tm["wg"])
+    u = tm["u"]
+
+    def step(S, inputs):
+        wt, kt, vt, rt = inputs                          # (B,H,hs) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None].astype(S.dtype) * kv)
+        S_new = wt[..., None].astype(S.dtype) * S + kv
+        return S_new, y
+
+    xs = (w.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          r.transpose(1, 0, 2, 3).astype(jnp.float32))
+    from .layers import chunked_scan
+    wkv_new, ys = chunked_scan(step, wkv.astype(jnp.float32), xs, chunk=256)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)         # (B,S,H,hs)
+    y = _group_norm(y, tm["ln_scale"].astype(x.dtype), cfg.norm_eps)
+    out = (y * g) @ tm["wo"]
+    return out, x[:, -1].astype(tm_shift.dtype), wkv_new.astype(wkv.dtype)
+
+
+def channel_mix_sequence(cm: Params, x: jnp.ndarray, cm_shift: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x_prev = jnp.concatenate([cm_shift.astype(x.dtype)[:, None], x[:, :-1]],
+                             axis=1)
+    xx = x_prev - x
+    xk = x + xx * cm["mu_k"]
+    xr = x + xx * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    kv = k @ cm["wv"]
+    out = jax.nn.sigmoid(xr @ cm["wr"]) * kv
+    return out, x[:, -1].astype(cm_shift.dtype)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, n_layers: int,
+                    dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    r = cfg.rwkv or RWKVConfig()
+    nh = d // r.head_size
+    return {
+        "tm_shift": jnp.zeros((n_layers, batch, d), dtype),
+        "cm_shift": jnp.zeros((n_layers, batch, d), dtype),
+        "wkv": jnp.zeros((n_layers, batch, nh, r.head_size, r.head_size),
+                         jnp.float32),
+    }
+
+
+def rwkv_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+               state: Dict[str, jnp.ndarray], norm1, norm2, norm_fn
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full pre-norm RWKV6 block over a sequence (train/prefill/decode-1)."""
+    h = norm_fn(norm1, x)
+    att, tm_shift, wkv = time_mix_sequence(
+        p["tm"], h, cfg, state["tm_shift"], state["wkv"])
+    x = x + att
+    h = norm_fn(norm2, x)
+    ffn, cm_shift = channel_mix_sequence(p["cm"], h, state["cm_shift"])
+    x = x + ffn
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}

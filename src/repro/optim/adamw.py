@@ -1,0 +1,104 @@
+"""AdamW with optionally COMPRESSED (blockwise-int8) first/second moments.
+
+The optimizer state is the largest persistent tensor class in training —
+the direct analogue of the paper's clustered index.  The physical-design
+advisor (repro.design) decides per tensor class whether moments are stored
+f32 (fast, 8 bytes/param) or q8 (2 bytes/param + scales, paying quant/
+dequant VPU cost per step — the alpha/beta of Appendix A).
+
+The q8 codec is kernels/ops.quantize_blockwise; v (second moment) is
+quantized in sqrt-space to preserve dynamic range.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops, ref
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_codec: str = "f32"      # "f32" | "q8"
+    q_block: int = 128
+    use_pallas: bool = False      # ref codec by default (jnp; fuses in XLA)
+
+
+def _q(x, cfg: AdamWConfig):
+    fn = ops.quantize_blockwise if cfg.use_pallas else ref.quantize_blockwise
+    return fn(x, cfg.q_block)
+
+
+def _dq(q, s, cfg: AdamWConfig):
+    fn = (ops.dequantize_blockwise if cfg.use_pallas
+          else ref.dequantize_blockwise)
+    return fn(q, s, cfg.q_block)
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    if cfg.state_codec == "q8":
+        def zero_q(p):
+            nb = -(-p.shape[-1] // cfg.q_block)
+            return {
+                "m_q": jnp.zeros(p.shape, jnp.int8),
+                "m_s": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32),
+                "v_q": jnp.zeros(p.shape, jnp.int8),
+                "v_s": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32),
+            }
+        moments = jax.tree.map(zero_q, params)
+    else:
+        moments = jax.tree.map(
+            lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                       "v": jnp.zeros(p.shape, jnp.float32)}, params)
+    return {"step": jnp.zeros((), jnp.int32), "moments": moments}
+
+
+def adamw_update(params: Params, grads: Params, state: Dict[str, Any],
+                 cfg: AdamWConfig) -> Tuple[Params, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd_f32(p, g, mom):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * mom["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * mom["v"] + (1 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        new_p = p - cfg.lr * (update + cfg.weight_decay * p.astype(jnp.float32)
+                              ).astype(p.dtype)
+        return new_p.astype(p.dtype), {"m": m, "v": v}
+
+    def upd_q8(p, g, mom):
+        g = g.astype(jnp.float32)
+        m = _dq(mom["m_q"], mom["m_s"], cfg)                 # decompress
+        v_sqrt = _dq(mom["v_q"], mom["v_s"], cfg)
+        v = v_sqrt * v_sqrt
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        new_p = p - cfg.lr * (update + cfg.weight_decay *
+                              p.astype(jnp.float32)).astype(p.dtype)
+        m_q, m_s = _q(m, cfg)                                # compress
+        v_q, v_s = _q(jnp.sqrt(v), cfg)
+        return new_p.astype(p.dtype), {"m_q": m_q, "m_s": m_s,
+                                       "v_q": v_q, "v_s": v_s}
+
+    upd = upd_q8 if cfg.state_codec == "q8" else upd_f32
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["moments"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_moments = treedef.unflatten([o[1] for o in out])
+    return new_params, {"step": step, "moments": new_moments}

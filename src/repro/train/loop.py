@@ -1,0 +1,150 @@
+"""Fault-tolerant training loop.
+
+* checkpoint/restart: atomic compressed checkpoints (repro.checkpoint),
+  auto-resume from the latest on construction;
+* straggler mitigation: per-step wall-time EMA; a step slower than
+  `straggler_factor` x EMA is logged and counted — the hook where a real
+  multi-host deployment would trigger re-sharding away from the slow host
+  (we expose `on_straggler` for tests / integrations);
+* elastic scaling: `reshard(new_mesh)` rebuilds shardings for a different
+  device count and device_put's the state across (works because the data
+  pipeline is stateless-in-step and batch specs are derived per mesh);
+* gradient compression + compressed optimizer moments come from the
+  design advisor's LayoutPlan (the paper's technique driving the trainer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointConfig, CheckpointManager
+from ..data.pipeline import DataConfig, batch_at
+from ..design import plan_layout
+from ..models import model as MD
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from .step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    lr: float = 3e-4
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_last_k: int = 2
+    straggler_factor: float = 3.0
+    hbm_budget_bytes: float = 16e9
+    use_design_advisor: bool = True
+    grad_accum: int = 1
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.on_straggler = on_straggler
+        self.straggler_events: List[int] = []
+        self.history: List[Dict[str, float]] = []
+
+        # --- the paper's advisor chooses the physical layout ---
+        n_chips = jax.device_count()
+        flops = 6.0 * cfg.param_count() * tc.batch * tc.seq / n_chips
+        if tc.use_design_advisor:
+            self.plan = plan_layout(cfg, "train", tc.batch, tc.seq, n_chips,
+                                    tc.hbm_budget_bytes,
+                                    base_flops_per_chip=flops)
+            moments = ("q8" if self.plan.choices.get("adam_m") == "q8"
+                       else "f32")
+            grad_comp = ("q8" if self.plan.choices.get("grad_wire") == "q8"
+                         else None)
+        else:
+            self.plan = None
+            moments, grad_comp = "f32", None
+
+        self.opt_cfg = AdamWConfig(lr=tc.lr, state_codec=moments)
+        self.data_cfg = DataConfig(
+            vocab=cfg.vocab, batch=tc.batch, seq=tc.seq, seed=tc.seed,
+            d_model=cfg.d_model if cfg.frontend != "tokens" else 0)
+        self._step_fn = jax.jit(make_train_step(
+            self.cfg, self.opt_cfg, remat=True, grad_compression=grad_comp,
+            attn_impl="chunked" if tc.seq >= 2048 else "full"))
+
+        self.params = MD.init_params(jax.random.PRNGKey(tc.seed), cfg,
+                                     jnp.float32)
+        self.opt_state = adamw_init(self.params, self.opt_cfg)
+        self.step = 0
+
+        self.ckpt: Optional[CheckpointManager] = None
+        if tc.checkpoint_dir:
+            self.ckpt = CheckpointManager(CheckpointConfig(
+                directory=tc.checkpoint_dir, keep_last_k=tc.keep_last_k))
+            if self.ckpt.latest_step() is not None:
+                self.restore()
+
+    # ------------------------------------------------------------------
+    def restore(self) -> None:
+        assert self.ckpt is not None
+        step, params, opt, extra = self.ckpt.restore_into(
+            self.params, self.opt_state)
+        self.params = jax.tree.map(jnp.asarray, params)
+        self.opt_state = jax.tree.map(jnp.asarray, opt)
+        self.step = step
+        print(f"[trainer] resumed from step {step}")
+
+    def reshard(self, mesh, param_specs_tree) -> None:
+        """Elastic scaling: move state onto a new mesh's shardings."""
+        from jax.sharding import NamedSharding
+        put = lambda t, sp: jax.device_put(t, NamedSharding(mesh, sp))
+        self.params = jax.tree.map(put, self.params, param_specs_tree)
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        steps = steps if steps is not None else self.tc.steps
+        ema = None
+        target = self.step + steps
+        first = True
+        while self.step < target:
+            batch = batch_at(self.data_cfg, self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, loss = self._step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(loss)
+            dt = time.perf_counter() - t0
+            if first:
+                first = False  # compile step: excluded from the EMA
+            elif ema is None:
+                ema = dt
+            else:
+                if dt > self.tc.straggler_factor * ema:
+                    self.straggler_events.append(self.step)
+                    if self.on_straggler:
+                        self.on_straggler(self.step, dt / ema)
+                ema = 0.9 * ema + 0.1 * dt
+            self.history.append({"step": self.step, "loss": loss,
+                                 "seconds": dt})
+            if self.step % self.tc.log_every == 0:
+                print(f"[trainer] step {self.step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            self.step += 1
+            if (self.ckpt is not None and
+                    self.step % self.tc.checkpoint_every == 0):
+                self.ckpt.save(self.step, self.params, self.opt_state,
+                               extra={"loss": loss})
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self.params, self.opt_state,
+                           extra={"loss": self.history[-1]["loss"]})
+            self.ckpt.wait()
+        return {"final_loss": self.history[-1]["loss"],
+                "first_loss": self.history[0]["loss"],
+                "stragglers": list(self.straggler_events)}

@@ -1,0 +1,85 @@
+"""Step-function builders shared by the trainer, server, and dry-run.
+
+make_train_step: loss -> grad -> (optionally compressed) gradient reduction
+-> AdamW (optionally compressed moments).  Activation checkpointing wraps
+every scanned layer when remat=True (the default training policy).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MD
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..kernels import ref as KREF
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    remat: bool = True,
+                    grad_compression: Optional[str] = None,
+                    compute_dtype=jnp.bfloat16,
+                    attn_impl: str = "chunked",
+                    act_specs=None) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    Mixed precision: params are the f32 master copy; a bf16 cast feeds the
+    forward/backward (grads flow through the cast back to f32).  Training
+    uses CHUNKED (online-softmax, rematerialized) attention so S^2 score
+    tensors never materialize.
+
+    grad_compression="q8" quantizes gradients blockwise to int8 before they
+    cross the network (simulated wire format: q8 values + f32 block scales;
+    the dequantized gradient feeds AdamW).  This is the paper's
+    update-path compression trade-off (alpha cost vs I/O saving) applied to
+    the gradient all-reduce.
+    """
+
+    def loss_fn(params, batch):
+        if compute_dtype is not None:
+            params_c = jax.tree.map(
+                lambda p: p.astype(compute_dtype)
+                if p.dtype == jnp.float32 and p.ndim > 1 else p, params)
+        else:
+            params_c = params
+        return MD.loss_fn(params_c, cfg, batch["tokens"], batch["labels"],
+                          embeds=batch.get("embeds"), remat=remat,
+                          attn_impl=attn_impl, act_specs=act_specs)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_compression == "q8":
+            def qdq(g):
+                if g.ndim == 0 or g.shape[-1] < 8:
+                    return g
+                q, s = KREF.quantize_blockwise(g)
+                return KREF.dequantize_blockwise(q, s, dtype=g.dtype)
+            grads = jax.tree.map(qdq, grads)
+        params, opt_state = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, act_specs=None) -> Callable:
+    """Returns prefill(params, batch) -> logits, with chunked (online-
+    softmax) attention so 32k+ sequences never materialize S^2 scores."""
+
+    def prefill(params, batch):
+        return MD.forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), attn_impl="chunked",
+                          act_specs=act_specs)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """Returns decode(params, state, tokens) -> (logits, new_state)."""
+
+    def decode(params, state, tokens):
+        return MD.decode_step(params, state, cfg, tokens)
+
+    return decode

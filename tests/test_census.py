@@ -1,0 +1,101 @@
+"""Census validation: on configs whose layer stack is fully UNROLLED (no
+while loops), XLA cost_analysis is trustworthy — the analytic census must
+agree with it.  This is the calibration that justifies using the census for
+the full-scale roofline (where scans make cost_analysis undercount ~L x;
+demonstrated in test_while_loop_undercount)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.census import census, forward_flops
+from repro.models import model as MD
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def _fwd_flops_compiled(cfg, b, s, unroll):
+    old = MD.SCAN_UNROLL
+    MD.SCAN_UNROLL = unroll
+    try:
+        params = jax.eval_shape(
+            lambda: MD.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def f(p, t):
+            return MD.forward(p, cfg, tokens=t, attn_impl="full")
+
+        comp = jax.jit(f).lower(params, toks).compile()
+        return float(comp.cost_analysis()["flops"])
+    finally:
+        MD.SCAN_UNROLL = old
+
+
+class TestWhileLoopUndercount:
+    def test_cost_analysis_ignores_trip_count(self):
+        """The defect that motivates the census (EXPERIMENTS.md)."""
+        def make(n):
+            def f(x, w):
+                def body(c, _):
+                    return c @ w, None
+                return jax.lax.scan(body, x, None, length=n)[0]
+            return f
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        f5 = jax.jit(make(5)).lower(x, w).compile().cost_analysis()["flops"]
+        f10 = jax.jit(make(10)).lower(x, w).compile().cost_analysis()["flops"]
+        assert f5 == f10  # trip count is NOT multiplied
+
+
+class TestCensusValidation:
+    @pytest.mark.parametrize("layers,d,heads,kv,ff", [
+        (2, 128, 4, 2, 256), (4, 256, 8, 4, 512)])
+    def test_dense_forward_matches_unrolled(self, layers, d, heads, kv, ff):
+        cfg = ModelConfig("t", "dense", layers, d, heads, kv, ff, 512,
+                          d_head=d // heads)
+        b, s = 2, 128
+        compiled = _fwd_flops_compiled(cfg, b, s, unroll=layers)
+        analytic = sum(forward_flops(cfg, b, s, s, False).values())
+        assert abs(analytic / compiled - 1) < 0.15, \
+            f"census {analytic:.3e} vs compiled {compiled:.3e}"
+
+    def test_undercount_magnitude_with_loops(self):
+        """With the scan NOT unrolled, cost_analysis loses ~(L-1)/L of the
+        layer FLOPs — the error the census corrects."""
+        cfg = ModelConfig("t", "dense", 8, 128, 4, 2, 256, 512, d_head=32)
+        rolled = _fwd_flops_compiled(cfg, 2, 128, unroll=1)
+        unrolled = _fwd_flops_compiled(cfg, 2, 128, unroll=8)
+        assert unrolled > 3.0 * rolled
+
+    def test_moe_forward_matches_unrolled(self):
+        cfg = ModelConfig("t", "moe", 2, 128, 4, 2, 256, 512, d_head=32,
+                          moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=128,
+                                        capacity_factor=1.25))
+        b, s = 2, 128
+        compiled = _fwd_flops_compiled(cfg, b, s, unroll=2)
+        analytic = sum(forward_flops(cfg, b, s, s, False).values())
+        # MoE dispatch gather/scatter adds non-matmul flops; allow 30%
+        assert abs(analytic / compiled - 1) < 0.30
+
+    def test_train_flops_factor(self):
+        """Train census ~= 4x forward (bwd 2x + remat recompute 1x)."""
+        cfg = ModelConfig("t", "dense", 2, 128, 4, 2, 256, 512, d_head=32)
+        c = census(cfg, "train", 4, 128, n_chips=1, tp=1)
+        f = sum(forward_flops(cfg, 4, 128, 128, False).values())
+        assert 3.5 * f < c.flops < 4.6 * f
+
+    def test_decode_flops_scale_with_batch_not_seq(self):
+        cfg = ModelConfig("t", "dense", 2, 128, 4, 2, 256, 512, d_head=32)
+        a = census(cfg, "decode", 8, 1024, n_chips=1, tp=1)
+        b = census(cfg, "decode", 16, 1024, n_chips=1, tp=1)
+        assert 1.8 < b.flops / a.flops < 2.2
+
+    def test_collectives_zero_on_single_chip(self):
+        cfg = ModelConfig("t", "dense", 2, 128, 4, 2, 256, 512, d_head=32)
+        c = census(cfg, "train", 4, 128, n_chips=1, tp=1)
+        assert c.wire_bytes == 0.0
+
+    def test_grad_compression_cuts_wire_bytes(self):
+        cfg = ModelConfig("t", "dense", 2, 128, 4, 2, 256, 512, d_head=32)
+        a = census(cfg, "train", 64, 128, n_chips=256, tp=16)
+        b = census(cfg, "train", 64, 128, n_chips=256, tp=16,
+                   grad_compression="q8")
+        assert b.wire_bytes < a.wire_bytes  # int8 gradients on the wire

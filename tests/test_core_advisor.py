@@ -1,0 +1,147 @@
+"""Integration + property tests for candidate selection, enumeration, DTAc."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdvisorOptions, DesignAdvisor, IndexDef,
+                        base_configuration, make_tpch_like,
+                        make_tpch_workload, storage_used)
+from repro.core import candidates as cand
+from repro.core.advisor import staged_recommend
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return make_tpch_like(scale=0.5, z=0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def workload(schema):
+    return make_tpch_workload(schema, insert_weight=0.1)
+
+
+@pytest.fixture(scope="module")
+def base_size(schema, workload):
+    adv = DesignAdvisor(workload)
+    return sum(adv.sizes.size(i) for i in base_configuration(schema).indexes)
+
+
+class TestSkyline:
+    def test_skyline_no_dominated_points(self, workload, schema):
+        adv = DesignAdvisor(workload)
+        q = workload.queries()[0]
+        raw = cand.syntactically_relevant(q, schema.tables[q.table])
+        raw = cand.expand_with_compression(raw, ("NS", "LDICT"))
+        base = base_configuration(schema)
+        adv.estimate_sizes(raw)
+        costed = cand.cost_candidates(q, raw, base, adv.optimizer, adv.sizes)
+        sky = cand.select_skyline(costed)
+        for a in sky:
+            for b in sky:
+                if a is b:
+                    continue
+                assert not (b.cost <= a.cost and b.size <= a.size
+                            and (b.cost < a.cost or b.size < a.size))
+
+    def test_skyline_superset_of_best(self, workload, schema):
+        """The lowest-cost configuration is always on the skyline."""
+        adv = DesignAdvisor(workload)
+        q = workload.queries()[0]
+        raw = cand.syntactically_relevant(q, schema.tables[q.table])
+        base = base_configuration(schema)
+        costed = cand.cost_candidates(q, raw, base, adv.optimizer, adv.sizes)
+        sky = cand.select_skyline(costed)
+        best = min(costed, key=lambda c: (c.cost, c.size))
+        assert any(c.index.key == best.index.key and c.cost == best.cost
+                   for c in sky)
+
+    def test_skyline_keeps_small_slow_candidates(self, workload, schema):
+        """§6.1: skyline retains compressed candidates that top-k prunes."""
+        adv = DesignAdvisor(workload)
+        q = workload.queries()[0]
+        raw = cand.syntactically_relevant(q, schema.tables[q.table])
+        raw = cand.expand_with_compression(raw, ("NS", "LDICT"))
+        adv.estimate_sizes(raw)
+        base = base_configuration(schema)
+        costed = cand.cost_candidates(q, raw, base, adv.optimizer, adv.sizes)
+        sky = {c.index.key for c in cand.select_skyline(costed)}
+        topk = {c.index.key for c in cand.select_topk(costed, 2)}
+        assert len(sky - topk) > 0
+
+
+class TestEnumeration:
+    @pytest.mark.parametrize("variant", ["pure", "density", "backtrack"])
+    def test_budget_respected(self, workload, base_size, variant):
+        opts = AdvisorOptions(enumeration=variant)
+        rec = DesignAdvisor(workload, opts).recommend(0.3 * base_size)
+        assert rec.used_bytes <= 0.3 * base_size + 1e-6
+
+    def test_monotone_no_worse_than_base(self, workload, base_size):
+        rec = DesignAdvisor(workload).recommend(0.2 * base_size)
+        assert rec.cost <= rec.base_cost
+
+    def test_backtrack_no_worse_than_pure(self, workload, base_size):
+        for frac in (0.1, 0.3):
+            bt = DesignAdvisor(workload, AdvisorOptions(
+                enumeration="backtrack")).recommend(frac * base_size)
+            pure = DesignAdvisor(workload, AdvisorOptions(
+                enumeration="pure")).recommend(frac * base_size)
+            assert bt.cost <= pure.cost + 1e-9
+
+    def test_one_clustered_per_table(self, workload, base_size, schema):
+        rec = DesignAdvisor(workload).recommend(0.5 * base_size)
+        for t in schema.tables:
+            n = sum(1 for i in rec.config.indexes
+                    if i.table == t and i.clustered)
+            assert n == 1
+
+    @given(st.floats(0.05, 1.0))
+    @settings(max_examples=8, deadline=None)
+    def test_property_budget_always_respected(self, workload, base_size,
+                                              frac):
+        rec = DesignAdvisor(workload).recommend(frac * base_size)
+        assert rec.used_bytes <= frac * base_size + 1e-6
+        assert rec.cost <= rec.base_cost + 1e-9
+
+
+class TestAdvisorEndToEnd:
+    def test_dtac_beats_dta_tight_budget(self, workload, base_size):
+        b = 0.2 * base_size
+        dtac = DesignAdvisor(workload, AdvisorOptions.dtac()).recommend(b)
+        dta = DesignAdvisor(workload, AdvisorOptions.dta()).recommend(b)
+        assert dtac.improvement > dta.improvement
+
+    def test_dtac_beats_staged(self, workload, base_size):
+        """Example 1: decoupling index choice from compression is poor."""
+        b = 0.25 * base_size
+        dtac = DesignAdvisor(workload, AdvisorOptions.dtac()).recommend(b)
+        staged = staged_recommend(workload, b)
+        assert dtac.cost <= staged.cost + 1e-9
+
+    def test_zero_budget_still_improves(self, workload):
+        """App. D.2: 0% budget => compress base tables to fund indexes."""
+        rec = DesignAdvisor(workload, AdvisorOptions.dtac()).recommend(0.0)
+        assert rec.improvement > 0.0
+        assert rec.used_bytes <= 0.0 + 1e-6
+
+    def test_insert_intensive_avoids_compression(self, schema, base_size):
+        """Fig. 15/17: heavy INSERTs => fewer compressed indexes chosen."""
+        sel = make_tpch_workload(schema, insert_weight=0.1)
+        ins = make_tpch_workload(schema, insert_weight=50.0)
+        b = 1.0 * base_size
+        rec_sel = DesignAdvisor(sel, AdvisorOptions.dtac()).recommend(b)
+        rec_ins = DesignAdvisor(ins, AdvisorOptions.dtac()).recommend(b)
+        n_sel = sum(1 for i in rec_sel.config.indexes if i.compression)
+        n_ins = sum(1 for i in rec_ins.config.indexes if i.compression)
+        assert n_ins <= n_sel
+
+    def test_deduction_reduces_estimation_cost(self, workload):
+        with_d = DesignAdvisor(workload, AdvisorOptions(use_deduction=True))
+        no_d = DesignAdvisor(workload, AdvisorOptions(use_deduction=False))
+        r1 = with_d.recommend(1e9)
+        r2 = no_d.recommend(1e9)
+        assert r1.estimation_cost_pages <= r2.estimation_cost_pages
+
+    def test_improvement_monotone_in_budget(self, workload, base_size):
+        r = [DesignAdvisor(workload).recommend(f * base_size).improvement
+             for f in (0.1, 0.5, 1.0)]
+        assert r[0] <= r[2] + 0.02  # small tolerance for greedy noise

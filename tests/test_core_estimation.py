@@ -1,0 +1,179 @@
+"""Tests for the estimation-plan graph search (§5), errors, and AE (App. B)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EstimationPlanner, IndexDef, NodeKey, SampleManager,
+                        State, make_tpch_like)
+from repro.core import distinct as DV
+from repro.core import errors as E
+from repro.core.samplecf import full_index_sizes
+from repro.core.synopses import MVDef, SynopsisManager
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return make_tpch_like(scale=0.5, z=0, seed=0)
+
+
+class TestErrors:
+    def test_goodman_product_variance(self):
+        a, b = E.ErrorRV(1.0, 0.1), E.ErrorRV(1.1, 0.2)
+        got = E.compose([a, b])
+        want_var = (0.01 + 1.0) * (0.04 + 1.21) - 1.0 * 1.21
+        assert math.isclose(got.var, want_var, rel_tol=1e-9)
+        assert math.isclose(got.mean, 1.1, rel_tol=1e-9)
+
+    def test_prob_within_monotone_in_e(self):
+        rv = E.ErrorRV(1.0, 0.2)
+        ps = [E.prob_within(rv, e) for e in (0.1, 0.3, 0.5, 1.0)]
+        assert all(a <= b for a, b in zip(ps, ps[1:]))
+
+    def test_samplecf_error_shrinks_with_f(self):
+        a = E.samplecf_error("LDICT", 0.01)
+        b = E.samplecf_error("LDICT", 0.10)
+        assert b.std < a.std
+
+    def test_bias_correction_normalizes_mean(self):
+        raw = E.samplecf_error("LDICT", 0.01, corrected=False)
+        cor = E.samplecf_error("LDICT", 0.01, corrected=True)
+        assert raw.mean > 1.0 and cor.mean == 1.0 and cor.std < raw.std
+
+    @given(st.floats(0.01, 0.99), st.floats(0.0, 0.5))
+    @settings(max_examples=50, deadline=None)
+    def test_property_prob_within_bounds(self, f, bias):
+        rv = E.ErrorRV(1.0 + bias, 0.05)
+        p = E.prob_within(rv, 0.5)
+        assert 0.0 <= p <= 1.0
+
+
+class TestPlanner:
+    def make_targets(self, method="NS"):
+        return [
+            NodeKey("lineitem", ("l_shipdate",), method),
+            NodeKey("lineitem", ("l_extendedprice",), method),
+            NodeKey("lineitem", ("l_shipdate", "l_extendedprice"), method),
+            NodeKey("lineitem", ("l_shipdate", "l_extendedprice",
+                                 "l_quantity"), method),
+        ]
+
+    def test_greedy_uses_deduction_when_loose(self, schema):
+        planner = EstimationPlanner(schema.tables)
+        plan = planner.plan(self.make_targets(), e=1.0, q=0.8)
+        assert plan.feasible
+        assert plan.n_deduced() >= 1  # wide indexes deduced from narrow ones
+
+    def test_tight_constraint_samples_more(self, schema):
+        planner = EstimationPlanner(schema.tables)
+        loose = planner.plan(self.make_targets(), e=1.0, q=0.8)
+        tight = planner.plan(self.make_targets(), e=0.05, q=0.99)
+        assert tight.n_sampled() >= loose.n_sampled()
+
+    def test_greedy_cost_leq_all_sampled(self, schema):
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets()
+        plan = planner.plan(targets, e=0.8, q=0.85)
+        f = plan.f
+        from repro.core.estimation_graph import sampling_cost
+        all_cost = sum(sampling_cost(schema.tables[t.table], t, f)
+                       for t in targets)
+        assert plan.total_cost <= all_cost
+
+    def test_existing_index_is_free(self, schema):
+        t = NodeKey("lineitem", ("l_shipdate",), "NS")
+        planner = EstimationPlanner(schema.tables, existing={t: 12345.0})
+        plan = planner.greedy([t], f=0.05, e=0.5, q=0.9)
+        assert plan.nodes[t].state is State.EXACT
+        assert plan.total_cost == 0.0
+        mgr = SampleManager(schema.tables)
+        est = planner.execute(plan, mgr)[t]
+        assert est.est_bytes == 12345.0 and est.cost_pages == 0.0
+
+    def test_optimal_not_worse_than_greedy(self, schema):
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets()[:3]
+        g = planner.greedy(targets, f=0.05, e=0.8, q=0.85)
+        o = planner.optimal(targets, f=0.05, e=0.8, q=0.85)
+        assert o.feasible
+        assert o.total_cost <= g.total_cost + 1e-9
+
+    def test_execute_estimates_close_to_truth(self, schema):
+        li = schema.tables["lineitem"]
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets()
+        plan = planner.plan(targets, e=0.5, q=0.9)
+        mgr = SampleManager(schema.tables, seed=1)
+        ests = planner.execute(plan, mgr)
+        for t in targets:
+            idx = IndexDef(t.table, t.cols, t.method)
+            _, true = full_index_sizes(li, idx)
+            assert abs(ests[t].est_bytes / true - 1) < 0.5  # e=0.5 bound
+
+    @given(st.sampled_from(["NS", "LDICT"]), st.floats(0.2, 1.5),
+           st.floats(0.5, 0.95))
+    @settings(max_examples=10, deadline=None)
+    def test_property_plan_always_covers_targets(self, schema_method, e, q):
+        schema = make_tpch_like(scale=0.2, z=0, seed=0)
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets(schema_method)
+        plan = planner.plan(targets, e=e, q=q)
+        for t in targets:
+            assert plan.nodes[t].state in (State.SAMPLED, State.DEDUCED)
+
+
+class TestAdaptiveEstimator:
+    def test_table1_ordering(self, schema):
+        """AE error << multiply error on an aggregation MV (Table 1)."""
+        from repro.core import SampleManager
+        samples = SampleManager(schema.tables, seed=0)
+        syn = SynopsisManager(schema, samples)
+        mv = MVDef("mv_ship", "lineitem", group_by=("l_shipdate",))
+        _, n_ae = syn.mv_sample(mv, 0.05)
+        li = schema.tables["lineitem"]
+        true = li.ndv(["l_shipdate"])
+        sample = samples.get_sample("lineitem", 0.05)
+        d_sample = int(np.unique(sample.values["l_shipdate"]).size)
+        n_mult = DV.estimate_multiply(d_sample, 0.05)
+        err_ae = abs(n_ae / true - 1)
+        err_mult = abs(n_mult / true - 1)
+        assert err_ae < err_mult
+        assert err_ae < 0.5
+
+    def test_ae_exact_when_full_sample(self):
+        keys = np.array([1, 1, 2, 3, 3, 3])
+        est = DV.adaptive_estimator(DV.frequency_stats(keys), 3, 6, 6)
+        assert est == 3.0
+
+    @given(st.integers(10, 500), st.integers(2, 50), st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_property_ae_bounded_by_n(self, n, ndv, seed):
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, ndv, n)
+        est = DV.adaptive_estimator(
+            DV.frequency_stats(keys), int(np.unique(keys).size), n, n * 10)
+        assert 0 <= est <= n * 10
+
+
+class TestSynopses:
+    def test_join_synopsis_fk_match(self, schema):
+        from repro.core import SampleManager
+        samples = SampleManager(schema.tables, seed=0)
+        syn = SynopsisManager(schema, samples)
+        js = syn.join_synopsis("lineitem", 0.05)
+        base = samples.get_sample("lineitem", 0.05)
+        assert js.nrows == base.nrows  # FKs always match (B.2)
+        assert "o_orderdate" in js.values  # dimension columns joined in
+
+    def test_filtered_sample(self, schema):
+        from repro.core import Predicate, SampleManager
+        samples = SampleManager(schema.tables, seed=0)
+        syn = SynopsisManager(schema, samples)
+        li = schema.tables["lineitem"]
+        lo, hi = li.minmax("l_shipdate")
+        mid = (lo + hi) // 2
+        fs = syn.filtered_sample("lineitem", Predicate("l_shipdate", lo, mid),
+                                 0.05)
+        assert fs.nrows > 0
+        assert fs.values["l_shipdate"].max() <= mid

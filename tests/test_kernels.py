@@ -1,0 +1,120 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes / dtypes / blocks, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES_2D = [(8, 128), (32, 256), (256, 512), (64, 384), (128, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+BLOCKS = [64, 128]
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES_2D)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("block", BLOCKS)
+    def test_matches_oracle(self, shape, dtype, block):
+        x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+        q_k, s_k = ops.quantize_blockwise(x, block=block)
+        q_r, s_r = ref.quantize_blockwise(x, block=block)
+        # scales may differ by an ULP across implementations, which can flip
+        # a round-half boundary: allow |dq| <= 1 at <=0.1% of positions.
+        dq = np.abs(np.asarray(q_k, np.int32) - np.asarray(q_r, np.int32))
+        assert dq.max() <= 1
+        assert (dq != 0).mean() <= 1e-3
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=1e-5)
+
+    @pytest.mark.parametrize("shape", [(4, 2, 96), (3, 5, 7, 130), (1, 128)])
+    def test_arbitrary_rank_and_ragged_last_dim(self, shape):
+        x = jax.random.normal(jax.random.PRNGKey(1), shape)
+        q, s = ops.quantize_blockwise(x, block=64)
+        q_r, s_r = ref.quantize_blockwise(x, block=64)
+        assert q.shape == x.shape
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+
+    def test_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (64, 256)) * 5
+        q, s = ops.quantize_blockwise(x)
+        out = ops.dequantize_blockwise(q, s)
+        # int8 blockwise: error <= scale/2 = absmax/254 per block
+        err = np.abs(np.asarray(out - x))
+        bound = np.repeat(np.asarray(s), 128, axis=-1)[:, :256] * 0.5 + 1e-6
+        assert (err <= bound).all()
+
+    @given(st.integers(0, 10), st.sampled_from([64, 128]))
+    @settings(max_examples=10, deadline=None)
+    def test_property_idempotent_roundtrip(self, seed, block):
+        """quantize(dequantize(quantize(x))) == quantize(x) (fixpoint)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (16, 256))
+        q1, s1 = ops.quantize_blockwise(x, block=block)
+        x1 = ops.dequantize_blockwise(q1, s1, block=block)
+        q2, s2 = ops.quantize_blockwise(x1, block=block)
+        x2 = ops.dequantize_blockwise(q2, s2, block=block)
+        np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_zero_input(self):
+        q, s = ops.quantize_blockwise(jnp.zeros((8, 128)))
+        assert (np.asarray(q) == 0).all()
+        out = ops.dequantize_blockwise(q, s)
+        assert (np.asarray(out) == 0).all()
+
+
+class TestDequantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES_2D)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(3), shape) * 2
+        q, s = ref.quantize_blockwise(x)
+        out_k = ops.dequantize_blockwise(q, s, dtype=dtype)
+        out_r = ref.dequantize_blockwise(q, s, dtype=dtype)
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+            rtol=1e-6)
+
+
+class TestDequantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 128), (32, 256, 256),
+                                       (16, 384, 128), (64, 512, 256)])
+    @pytest.mark.parametrize("block", [128])
+    def test_matches_oracle(self, m, k, n, block):
+        a = jax.random.normal(jax.random.PRNGKey(4), (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(5), (k, n))
+        qw, s_row = ref.quantize_blockwise(w.T, block=block)  # (N, K)->(N,K/b)
+        # convert to (K, N) int8 + (K/block, N) scales layout
+        qw = qw.T
+        scales = s_row.T
+        out_k = ops.dequant_matmul(a, qw, scales, block=block)
+        out_r = ref.dequant_matmul(a, qw, scales, block=block)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_close_to_full_precision(self):
+        a = jax.random.normal(jax.random.PRNGKey(6), (32, 256))
+        w = jax.random.normal(jax.random.PRNGKey(7), (256, 128))
+        qw, s_row = ref.quantize_blockwise(w.T)
+        out = ops.dequant_matmul(a, qw.T, s_row.T)
+        exact = np.asarray(a @ w)
+        rel = np.abs(np.asarray(out) - exact) / (np.abs(exact) + 1e-3)
+        assert np.median(rel) < 0.02  # int8 ~ 2 decimal digits
+
+    @given(st.integers(0, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_property_linearity(self, seed):
+        """dequant_matmul(a1+a2, w) == dequant_matmul(a1,w)+dequant(a2,w)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a1 = jax.random.normal(k1, (8, 128))
+        a2 = jax.random.normal(k2, (8, 128))
+        w = jax.random.normal(jax.random.PRNGKey(seed + 99), (128, 128))
+        qw, s = ref.quantize_blockwise(w.T)
+        qw, s = qw.T, s.T
+        lhs = ops.dequant_matmul(a1 + a2, qw, s)
+        rhs = ops.dequant_matmul(a1, qw, s) + ops.dequant_matmul(a2, qw, s)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-4)
