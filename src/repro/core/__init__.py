@@ -6,24 +6,25 @@
 # join synopses / Adaptive-Estimator MV cardinalities (App. B).
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
+from .cost_engine import CostEngine
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
 from .relation import ColumnDef, IndexDef, Predicate, Table
 from .samplecf import SampleManager, sample_cf
 from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer, \
     base_configuration, storage_used
-from .workload import BulkInsert, Query, Workload, make_tpch_like, \
-    make_tpch_workload
+from .workload import BulkInsert, Query, Workload, make_scaled_workload, \
+    make_tpch_like, make_tpch_workload
 
 __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation",
-    "DEFAULT_ADVISOR_METHODS", "METHODS",
+    "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
     "EstimationPlanner", "NodeKey", "Plan", "State",
     "ColumnDef", "IndexDef", "Predicate", "Table",
     "SampleManager", "sample_cf",
     "ForeignKey", "MVDef", "Schema", "SynopsisManager",
     "Configuration", "SizeProvider", "WhatIfOptimizer",
     "base_configuration", "storage_used",
-    "BulkInsert", "Query", "Workload", "make_tpch_like",
-    "make_tpch_workload",
+    "BulkInsert", "Query", "Workload", "make_scaled_workload",
+    "make_tpch_like", "make_tpch_workload",
 ]

@@ -20,7 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import candidates as cand
 from .compression import DEFAULT_ADVISOR_METHODS
-from .enumeration import EnumerationResult, greedy_enumerate
+from .cost_engine import CostEngine
+from .enumeration import (EnumerationResult, greedy_enumerate,
+                          greedy_enumerate_scalar)
 from .estimation_graph import EstimationPlanner, NodeKey, Plan
 from .relation import IndexDef
 from .samplecf import SampleManager
@@ -42,6 +44,8 @@ class AdvisorOptions:
     q: float = 0.9                         # ... at this confidence
     use_deduction: bool = True
     sample_seed: int = 0
+    use_engine: bool = True                # batched cost engine (hot path)
+    engine_backend: str = "numpy"          # "numpy" | "jax"
 
     @staticmethod
     def dta() -> "AdvisorOptions":
@@ -98,24 +102,41 @@ class DesignAdvisor:
             for q in self.workload.queries()
         }
 
-    def generate_candidates(self) -> List[IndexDef]:
+    def _candidate_universe(self) -> Tuple[Dict[str, List[IndexDef]],
+                                           List[IndexDef], List[IndexDef]]:
+        """One pass over candidate generation + compression expansion.
+
+        Returns (per-query expanded candidates, expanded merged candidates,
+        the deduplicated union of both).  Everything downstream — size
+        estimation, per-query costing, the enumeration pool — reuses these
+        lists, so `expand_with_compression` runs once per candidate set
+        instead of once in generate_candidates() and again per query.
+        """
         per_query = self.per_query_raw()
         seen: Dict[Tuple, IndexDef] = {}
         for cands in per_query.values():
             for idx in cands:
                 seen.setdefault(idx.key, idx)
-        for idx in cand.merged_candidates(per_query):
+        merged = cand.merged_candidates(per_query)
+        for idx in merged:
             seen.setdefault(idx.key, idx)
         raw = list(seen.values())
         if not self.opt.consider_compression:
-            return raw
-        return cand.expand_with_compression(raw, self.opt.methods)
+            return per_query, merged, raw
+        per_query_exp = {name: cand.expand_with_compression(c,
+                                                            self.opt.methods)
+                         for name, c in per_query.items()}
+        merged_exp = cand.expand_with_compression(merged, self.opt.methods)
+        all_cands = cand.expand_with_compression(raw, self.opt.methods)
+        return per_query_exp, merged_exp, all_cands
+
+    def generate_candidates(self) -> List[IndexDef]:
+        return self._candidate_universe()[2]
 
     # ------------------------------------------------------------------
     def estimate_sizes(self, all_cands: Sequence[IndexDef]
                        ) -> Tuple[float, Optional[Plan], int, int]:
         """Register estimated sizes for every compressed candidate."""
-        targets = []
         tkey_to_defs: Dict[NodeKey, List[IndexDef]] = {}
         for idx in all_cands:
             if idx.compression is None or idx.predicate is not None:
@@ -140,35 +161,37 @@ class DesignAdvisor:
                     plan = p
                     break
         ests = planner.execute(plan, self.samples)
+        # execute() also resolves intermediate plan nodes; only register
+        # sizes for defs that were actually requested as targets.
         for k, est in ests.items():
-            for idx in tkey_to_defs.get(k, [IndexDef(k.table, k.cols,
-                                                     k.method)]):
+            for idx in tkey_to_defs.get(k, ()):
                 self.sizes.register(idx, est.est_bytes)
-        # clustered variants share sizes with their (table, colset): rely on
-        # registration of the exact cols; clustered candidates were included
-        # in targets because expand kept their cols tuples.
         return plan.total_cost, plan, plan.n_sampled(), plan.n_deduced()
 
     # ------------------------------------------------------------------
     def recommend(self, budget_bytes: float) -> Recommendation:
         t0 = time.perf_counter()
         base = base_configuration(self.schema)
-        base_cost = self.optimizer.workload_cost(base)
 
-        all_cands = self.generate_candidates()
+        per_query_exp, merged_all, all_cands = self._candidate_universe()
         est_cost, plan, n_s, n_d = self.estimate_sizes(all_cands)
 
+        # The batched engine is built after size estimation so every
+        # compressed candidate is scored with its estimated size.
+        engine = None
+        if self.opt.use_engine:
+            engine = CostEngine(self.workload, self.sizes,
+                                backend=self.opt.engine_backend)
+        base_cost = (engine.config_cost(base) if engine is not None
+                     else self.optimizer.workload_cost(base))
+
         # per-query candidate selection
-        per_query = self.per_query_raw()
-        merged = cand.merged_candidates(per_query)
         pool: Dict[Tuple, IndexDef] = {}
         n_cand = 0
         for q in self.workload.queries():
-            raw = per_query[q.name]
-            if self.opt.consider_compression:
-                raw = cand.expand_with_compression(raw, self.opt.methods)
-            costed = cand.cost_candidates(q, raw, base, self.optimizer,
-                                          self.sizes)
+            costed = cand.cost_candidates(q, per_query_exp[q.name], base,
+                                          self.optimizer, self.sizes,
+                                          engine=engine)
             n_cand += len(costed)
             if self.opt.candidate_mode == "skyline":
                 sel = cand.select_skyline(costed)
@@ -181,14 +204,19 @@ class DesignAdvisor:
 
         # merged candidates enter the pool directly (Figure 1: Merging sits
         # between candidate selection and enumeration)
-        merged_all = (cand.expand_with_compression(merged, self.opt.methods)
-                      if self.opt.consider_compression else merged)
         for idx in merged_all:
             pool.setdefault(idx.key, idx)
 
-        res = greedy_enumerate(self.optimizer, self.sizes,
-                               list(pool.values()), base, budget_bytes,
-                               variant=self.opt.enumeration)
+        if engine is not None:
+            res = greedy_enumerate(self.optimizer, self.sizes,
+                                   list(pool.values()), base, budget_bytes,
+                                   variant=self.opt.enumeration,
+                                   engine=engine)
+        else:
+            res = greedy_enumerate_scalar(self.optimizer, self.sizes,
+                                          list(pool.values()), base,
+                                          budget_bytes,
+                                          variant=self.opt.enumeration)
         return Recommendation(
             config=res.config, base=base, base_cost=base_cost, cost=res.cost,
             used_bytes=res.used_bytes, budget_bytes=budget_bytes,

@@ -11,11 +11,14 @@ with the what-if optimizer, and then select either:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 from .relation import IndexDef, Table
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer
 from .workload import Query
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from .cost_engine import CostEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,19 +74,33 @@ def expand_with_compression(indexes: Sequence[IndexDef],
 
 def cost_candidates(query: Query, cands: Sequence[IndexDef],
                     base: Configuration, optimizer: WhatIfOptimizer,
-                    sizes: SizeProvider) -> List[Candidate]:
+                    sizes: SizeProvider,
+                    engine: Optional["CostEngine"] = None) -> List[Candidate]:
+    """Cost each single-index configuration for `query`.
+
+    With `engine` (a repro.core.cost_engine.CostEngine) the whole candidate
+    list is scored in one vectorized pass; without it, the scalar what-if
+    optimizer is queried per candidate (the correctness reference).
+    """
+    costs = (engine.candidate_query_costs(query, base, cands)
+             if engine is not None else None)
     out = []
-    for idx in cands:
+    for k, idx in enumerate(cands):
         if idx.clustered:
             old = base.clustered(idx.table)
-            cfg = base.replace(old, idx) if old else base.add(idx)
             # clustered replacement "size" = delta vs uncompressed base layout
             size = sizes.size(idx) - (sizes.size(old) if old else 0.0)
         else:
-            cfg = base.add(idx)
             size = sizes.size(idx)
-        out.append(Candidate(index=idx, size=size,
-                             cost=optimizer.statement_cost(query, cfg)))
+        if costs is not None:
+            cost = float(costs[k])
+        elif idx.clustered:
+            old = base.clustered(idx.table)
+            cfg = base.replace(old, idx) if old else base.add(idx)
+            cost = optimizer.statement_cost(query, cfg)
+        else:
+            cost = optimizer.statement_cost(query, base.add(idx))
+        out.append(Candidate(index=idx, size=size, cost=cost))
     return out
 
 

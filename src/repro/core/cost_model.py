@@ -9,11 +9,25 @@ unchanged — compression helps purely through the smaller (estimated) size.
 
 Cost unit is abstract "milliseconds"; constants are calibrated so sequential
 I/O dominates large scans (the regime the paper targets).
+
+Every cost function is ufunc-safe: the numeric arguments may be scalars or
+NumPy arrays of any broadcastable shape, and the result has the broadcast
+shape.  The batched cost engine (repro.core.cost_engine) relies on this to
+score an entire candidate pool per greedy step in a handful of vectorized
+ops.  `compression` stays a scalar method name (or None); vectorized callers
+that mix methods pass precomputed per-element coefficient arrays via
+`alpha_coef` / `beta_coef` instead.
 """
 from __future__ import annotations
 
+from typing import Optional, Union
+
+import numpy as np
+
 from .compression import METHODS
 from .relation import PAGE_BYTES
+
+ArrayLike = Union[float, np.ndarray]
 
 # elementary constants (ms).  Calibrated to the paper's hardware (App. D.1:
 # 10K RPM HDD + dual-core CPU): sequential 8KB page ~0.08ms (100MB/s), random
@@ -30,8 +44,8 @@ INDEX_MAINT_CPU = 0.0005  # per tuple B-tree maintenance on insert
 SEEK_OVERHEAD = 1.0     # root-to-leaf traversal (upper levels mostly cached)
 
 
-def pages_of(size_bytes: float) -> float:
-    return max(size_bytes, 0.0) / PAGE_BYTES
+def pages_of(size_bytes: ArrayLike) -> ArrayLike:
+    return np.maximum(size_bytes, 0.0) / PAGE_BYTES
 
 
 def alpha(method: str) -> float:
@@ -42,48 +56,65 @@ def beta(method: str) -> float:
     return METHODS[method].beta * BETA_UNIT
 
 
-def scan_cost(size_bytes: float, nrows: float, ncols_used: int,
-              compression: str | None) -> float:
+def alpha_coef_of(compression: Optional[str]) -> float:
+    """Per-tuple compress-on-write CPU coefficient (0 when uncompressed)."""
+    return 0.0 if compression is None else alpha(compression)
+
+
+def beta_coef_of(compression: Optional[str]) -> float:
+    """Per-column-value decompression CPU coefficient (0 when uncompressed)."""
+    return 0.0 if compression is None else beta(compression)
+
+
+def scan_cost(size_bytes: ArrayLike, nrows: ArrayLike, ncols_used: ArrayLike,
+              compression: Optional[str] = None, *,
+              beta_coef: Optional[ArrayLike] = None) -> ArrayLike:
     """Sequential scan of `size_bytes` touching `nrows` tuples."""
+    if beta_coef is None:
+        beta_coef = beta_coef_of(compression)
     io = T_IO_SEQ * pages_of(size_bytes)
-    cpu = CPU_ROW * nrows
-    if compression is not None:
-        cpu += beta(compression) * nrows * ncols_used   # A.2
+    cpu = CPU_ROW * nrows + beta_coef * nrows * ncols_used   # A.2
     return io + cpu
 
 
-def seek_cost(size_bytes: float, nrows_index: float, selectivity: float,
-              ncols_used: int, compression: str | None) -> float:
+def seek_cost(size_bytes: ArrayLike, nrows_index: ArrayLike,
+              selectivity: ArrayLike, ncols_used: ArrayLike,
+              compression: Optional[str] = None, *,
+              beta_coef: Optional[ArrayLike] = None) -> ArrayLike:
     """Range seek reading a `selectivity` fraction of the index."""
+    if beta_coef is None:
+        beta_coef = beta_coef_of(compression)
     rows = nrows_index * selectivity
     io = SEEK_OVERHEAD + T_IO_SEQ * pages_of(size_bytes * selectivity)
-    cpu = CPU_ROW * rows
-    if compression is not None:
-        cpu += beta(compression) * rows * ncols_used
+    cpu = CPU_ROW * rows + beta_coef * rows * ncols_used
     return io + cpu
 
 
-def rid_lookup_cost(nrows: float, base_size_bytes: float,
-                    base_compression: str | None, ncols_used: int) -> float:
+def rid_lookup_cost(nrows: ArrayLike, base_size_bytes: ArrayLike,
+                    base_compression: Optional[str] = None,
+                    ncols_used: ArrayLike = 1, *,
+                    beta_coef: Optional[ArrayLike] = None) -> ArrayLike:
     """Random lookups into the base layout for a non-covering index path."""
+    if beta_coef is None:
+        beta_coef = beta_coef_of(base_compression)
     npages = pages_of(base_size_bytes)
-    touched = min(nrows, npages)  # cap: can't touch more pages than exist
+    touched = np.minimum(nrows, npages)  # cap: can't touch more pages than exist
     io = T_IO_RAND * touched
-    cpu = CPU_ROW * nrows
-    if base_compression is not None:
-        cpu += beta(base_compression) * nrows * ncols_used
+    cpu = CPU_ROW * nrows + beta_coef * nrows * ncols_used
     return io + cpu
 
 
-def update_cost(index_size_bytes: float, index_nrows: float,
-                rows_written: float, compression: str | None) -> float:
+def update_cost(index_size_bytes: ArrayLike, index_nrows: ArrayLike,
+                rows_written: ArrayLike,
+                compression: Optional[str] = None, *,
+                alpha_coef: Optional[ArrayLike] = None) -> ArrayLike:
     """Bulk-insert maintenance cost for ONE index (A.1)."""
-    if index_nrows <= 0:
-        frac_written = 1.0
-    else:
-        frac_written = min(rows_written / index_nrows, 1.0)
+    if alpha_coef is None:
+        alpha_coef = alpha_coef_of(compression)
+    frac_written = np.where(
+        np.asarray(index_nrows) <= 0, 1.0,
+        np.minimum(rows_written / np.maximum(index_nrows, 1e-300), 1.0))
     io = T_IO_SEQ * pages_of(index_size_bytes * frac_written)
     cpu = (CPU_ROW + INDEX_MAINT_CPU) * rows_written
-    if compression is not None:
-        cpu += alpha(compression) * rows_written     # A.1
+    cpu = cpu + alpha_coef * rows_written     # A.1
     return io + cpu

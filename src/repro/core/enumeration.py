@@ -11,12 +11,25 @@ Three variants:
 
 Clustered candidates replace the table's current clustered layout instead of
 being added alongside it.
+
+Two execution paths:
+
+* the batched path (default) drives a repro.core.cost_engine.CostEngine and
+  scores the whole pool per greedy step with a few vectorized ops, using
+  incremental delta evaluation — a candidate on table T only re-evaluates
+  statements on T;
+* `greedy_enumerate_scalar` is the original statement-at-a-time
+  implementation, kept as the correctness reference (the benchmark and the
+  parity tests compare the two).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from .cost_engine import CostEngine, TableEval
 from .relation import IndexDef
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer, storage_used
 
@@ -54,10 +67,130 @@ def _already_present(config: Configuration, idx: IndexDef) -> bool:
     return False
 
 
+# ---------------------------------------------------------------------------
+# Batched greedy (the default path)
+# ---------------------------------------------------------------------------
+
 def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
                      pool: Sequence[IndexDef], base: Configuration,
                      budget_bytes: float, variant: str = "backtrack",
-                     max_indexes: int = 64) -> EnumerationResult:
+                     max_indexes: int = 64,
+                     engine: Optional[CostEngine] = None) -> EnumerationResult:
+    """Engine-backed greedy: one vectorized pool scoring per step."""
+    assert variant in ("pure", "density", "backtrack")
+    if engine is None:
+        engine = CostEngine(optimizer.workload, sizes)
+    pool = list(pool)
+    engine.register(base.indexes)
+    engine.register(pool)
+
+    config = base
+    evals: Dict[str, TableEval] = {
+        t: engine.table_eval(config, t) for t in engine.blocks}
+    cost = sum(e.total for e in evals.values())
+    steps: List[str] = []
+
+    n = len(pool)
+    pool_sizes = np.array([sizes.size(p) for p in pool]) if n else np.zeros(0)
+    pool_tables = sorted({p.table for p in pool})
+
+    for _ in range(max_indexes):
+        if not n:
+            break
+        used = storage_used(config, base, sizes)
+        benefit = np.full(n, -np.inf)
+        delta_used = np.zeros(n)
+
+        for t in pool_tables:
+            c_id, sec_ids = engine.split(config, t)
+            cur = evals[t]
+            sec_ks = [k for k, p in enumerate(pool)
+                      if p.table == t and not p.clustered
+                      and not _already_present(config, p)]
+            if sec_ks:
+                ids = [engine.id_of(pool[k]) for k in sec_ks]
+                q_tot, upd_delta = engine.score_add_secondary(
+                    t, c_id, cur.q_cost, ids)
+                benefit[sec_ks] = cur.total - (q_tot + cur.u_total + upd_delta)
+                delta_used[sec_ks] = pool_sizes[sec_ks]
+            cl_ks = [k for k, p in enumerate(pool)
+                     if p.table == t and p.clustered
+                     and not _already_present(config, p)]
+            if cl_ks:
+                ids = [engine.id_of(pool[k]) for k in cl_ks]
+                q_tot, upd_c = engine.score_replace_clustered(t, sec_ids, ids)
+                benefit[cl_ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
+                old_c = config.clustered(t)
+                old_size = sizes.size(old_c) if old_c is not None else 0.0
+                delta_used[cl_ks] = pool_sizes[cl_ks] - old_size
+
+        valid = benefit > 1e-9
+        if not valid.any():
+            break
+        if variant == "density":
+            score = np.where(valid,
+                             benefit / np.maximum(delta_used, 1.0), -np.inf)
+        else:
+            score = np.where(valid, benefit, -np.inf)
+        feasible = valid & (used + delta_used <= budget_bytes)
+
+        best_any_k = int(np.argmax(score))
+        best_feas_k: Optional[int] = None
+        if feasible.any():
+            feas_score = np.where(feasible, score, -np.inf)
+            best_feas_k = int(np.argmax(feas_score))
+
+        chosen: Optional[Tuple[IndexDef, Configuration]] = None
+        recovered_choice = False
+        if variant == "backtrack" and (best_feas_k is None
+                                       or best_any_k != best_feas_k):
+            # The greedy-best choice is oversized: attempt recovery by
+            # swapping members for compressed variants (Figure 8).
+            oversized_cfg = _apply(config, pool[best_any_k])
+            recovered = _recover_oversized(
+                oversized_cfg, base, pool, sizes, engine.config_cost,
+                budget_bytes)
+            cand_cost = engine.config_cost(recovered) \
+                if recovered is not None else float("inf")
+            feas_cost = engine.config_cost(
+                _apply(config, pool[best_feas_k])) \
+                if best_feas_k is not None else float("inf")
+            if recovered is not None and cand_cost < min(feas_cost, cost):
+                chosen = (pool[best_any_k], recovered)
+                recovered_choice = True
+                steps.append(
+                    f"backtrack-recovered via {pool[best_any_k].label()}")
+            elif best_feas_k is not None:
+                chosen = (pool[best_feas_k],
+                          _apply(config, pool[best_feas_k]))
+        elif best_feas_k is not None:
+            chosen = (pool[best_feas_k], _apply(config, pool[best_feas_k]))
+
+        if chosen is None:
+            break
+        config = chosen[1]
+        if recovered_choice:
+            evals = {t: engine.table_eval(config, t) for t in engine.blocks}
+        else:
+            t = chosen[0].table
+            evals[t] = engine.table_eval(config, t)
+        new_cost = sum(e.total for e in evals.values())
+        steps.append(f"add {chosen[0].label()}  cost {cost:.1f}->{new_cost:.1f}")
+        cost = new_cost
+
+    return EnumerationResult(config=config, cost=cost,
+                             used_bytes=storage_used(config, base, sizes),
+                             steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference (the original statement-at-a-time implementation)
+# ---------------------------------------------------------------------------
+
+def greedy_enumerate_scalar(optimizer: WhatIfOptimizer, sizes: SizeProvider,
+                            pool: Sequence[IndexDef], base: Configuration,
+                            budget_bytes: float, variant: str = "backtrack",
+                            max_indexes: int = 64) -> EnumerationResult:
     assert variant in ("pure", "density", "backtrack")
     config = base
     cost = optimizer.workload_cost(config)
@@ -93,7 +226,8 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
             # swapping each member for a compressed variant (Figure 8).
             oversized_cfg = best_any[2]
             recovered = _recover_oversized(
-                oversized_cfg, base, pool, sizes, optimizer, budget_bytes)
+                oversized_cfg, base, pool, sizes, optimizer.workload_cost,
+                budget_bytes)
             cand_cost = optimizer.workload_cost(recovered) \
                 if recovered is not None else float("inf")
             feas_cost = optimizer.workload_cost(best_feasible[2]) \
@@ -120,12 +254,14 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
 
 def _recover_oversized(config: Configuration, base: Configuration,
                        pool: Sequence[IndexDef], sizes: SizeProvider,
-                       optimizer: WhatIfOptimizer,
+                       cost_fn: Callable[[Configuration], float],
                        budget_bytes: float) -> Optional[Configuration]:
     """Figure 8: replace members with compressed variants until it fits.
 
     Considers replacing each index (including repeatedly, cheapest-cost-loss
     first) and returns the fastest configuration that fits, or None.
+    `cost_fn` is any workload-cost oracle — the scalar optimizer or the
+    batched engine.
     """
     best: Optional[Tuple[float, Configuration]] = None
     frontier = [config]
@@ -142,7 +278,7 @@ def _recover_oversized(config: Configuration, base: Configuration,
                         continue
                     seen.add(cfg2.indexes)
                     if storage_used(cfg2, base, sizes) <= budget_bytes:
-                        c = optimizer.workload_cost(cfg2)
+                        c = cost_fn(cfg2)
                         if best is None or c < best[0]:
                             best = (c, cfg2)
                     else:

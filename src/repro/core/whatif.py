@@ -194,12 +194,18 @@ def update_statement_cost(stmt: BulkInsert, config: Configuration,
 
 
 class WhatIfOptimizer:
-    """Cached what-if cost API (the Figure-1 'query optimizer extension')."""
+    """Cached what-if cost API (the Figure-1 'query optimizer extension').
+
+    `statement_cost` / `workload_cost` are the scalar reference path;
+    `workload_cost_batch` routes through the batched cost engine
+    (repro.core.cost_engine) and scores many configurations at once.
+    """
 
     def __init__(self, workload: Workload, sizes: SizeProvider):
         self.workload = workload
         self.sizes = sizes
         self._cache: Dict[Tuple, float] = {}
+        self._engine = None
         self.calls = 0
 
     def statement_cost(self, stmt: Statement, config: Configuration) -> float:
@@ -217,3 +223,29 @@ class WhatIfOptimizer:
     def workload_cost(self, config: Configuration) -> float:
         return sum(s.weight * self.statement_cost(s, config)
                    for s in self.workload.statements)
+
+    def engine(self, backend: str = "numpy"):
+        """The batched cost engine bound to this optimizer's sizes.
+
+        Built lazily so every size registered on the SizeProvider *before*
+        the first batched call is picked up.  Sizes registered afterwards
+        are not reflected (the scalar cache has the same staleness rule).
+        """
+        if self._engine is None:
+            from .cost_engine import CostEngine  # deferred: avoids cycle
+            self._engine = CostEngine(self.workload, self.sizes,
+                                      backend=backend)
+        elif self._engine.backend != backend:
+            raise ValueError(
+                f"engine already built with backend "
+                f"{self._engine.backend!r}; cannot switch to {backend!r}")
+        return self._engine
+
+    def workload_cost_batch(self, configs: Iterable[Configuration]):
+        """Vectorized what-if: workload cost of each configuration.
+
+        Returns a float64 array aligned with `configs`.  The scalar
+        `workload_cost` remains the correctness reference; parity is
+        exercised by tests/test_cost_engine.py.
+        """
+        return self.engine().config_costs(list(configs))

@@ -248,3 +248,54 @@ def make_tpch_workload(schema: Schema, insert_weight: float = 0.1,
     qs.append(BulkInsert("load_orders", "orders",
                          max(od.nrows // 50, 50), weight=insert_weight))
     return Workload(schema=schema, statements=qs)
+
+
+def make_scaled_workload(schema: Schema, n_statements: int = 200,
+                         insert_fraction: float = 0.1, seed: int = 0,
+                         insert_weight: float = 0.1) -> Workload:
+    """Synthetic workload with an arbitrary statement count (advisor-scaling
+    experiments, paper §7's 'large workload' regime).
+
+    Random single-table analytic SELECTs — 1-3 range/equality filters over
+    random columns, 1-4 projected columns, mixed selectivities — plus an
+    `insert_fraction` share of bulk loads.  Deterministic in `seed`.
+    """
+    rng = np.random.default_rng(seed)
+    tables = list(schema.tables.values())
+    # weight table choice by row count: fact tables dominate, like TPC-H
+    p = np.array([t.nrows for t in tables], dtype=np.float64)
+    p /= p.sum()
+    n_inserts = int(round(n_statements * insert_fraction))
+    n_queries = n_statements - n_inserts
+    stmts: List[Statement] = []
+    for k in range(n_queries):
+        t = tables[int(rng.choice(len(tables), p=p))]
+        cols = [c.name for c in t.columns]
+        nf = int(rng.integers(1, min(3, len(cols)) + 1))
+        fcols = list(rng.choice(len(cols), size=nf, replace=False))
+        filters = []
+        for ci in fcols:
+            name = cols[int(ci)]
+            mn, mx = t.minmax(name)
+            if mx <= mn or rng.random() < 0.25:      # equality predicate
+                v = int(rng.integers(mn, mx + 1))
+                filters.append(Predicate(name, v, v))
+            else:                                    # range predicate
+                frac = float(rng.uniform(0.01, 0.6))
+                lo = int(rng.integers(mn, max(mn, int(mx - (mx - mn) * frac))
+                                      + 1))
+                hi = min(mx, lo + max(1, int((mx - mn) * frac)))
+                filters.append(Predicate(name, lo, hi))
+        rest = [c for c in cols if c not in {f.col for f in filters}]
+        nu = int(rng.integers(1, min(4, max(1, len(rest))) + 1))
+        used = [rest[int(i)] for i in
+                rng.choice(len(rest), size=min(nu, len(rest)),
+                           replace=False)] if rest else [filters[0].col]
+        stmts.append(Query(f"s{k:04d}", t.name, tuple(filters), tuple(used),
+                           weight=float(rng.uniform(0.5, 2.0))))
+    for k in range(n_inserts):
+        t = tables[int(rng.choice(len(tables), p=p))]
+        stmts.append(BulkInsert(f"ins{k:03d}", t.name,
+                                max(t.nrows // 50, 50),
+                                weight=insert_weight))
+    return Workload(schema=schema, statements=stmts)

@@ -126,7 +126,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     print(mem)  # proves it fits
-    ca = compiled.cost_analysis()
+    ca = RL.cost_analysis_dict(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed")
            if k in ca})  # FLOPs/bytes for the roofline
     hlo = compiled.as_text()

@@ -152,6 +152,18 @@ class Roofline:
         }
 
 
+def cost_analysis_dict(compiled) -> Dict:
+    """compiled.cost_analysis() normalized to a dict.
+
+    jax returns a dict or a one-element list of dicts depending on version;
+    every caller (analyze, dryrun, tests) goes through this shim.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca
+
+
 def analyze(compiled, n_devices: int, hlo_text: Optional[str] = None
             ) -> Roofline:
     """Build roofline terms from a compiled executable.
@@ -159,9 +171,7 @@ def analyze(compiled, n_devices: int, hlo_text: Optional[str] = None
     cost_analysis() FLOPs/bytes on SPMD modules are per-device program
     costs (the module is the per-device program).
     """
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_accessed = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.launch.census import census, forward_flops
+from repro.launch.roofline import cost_analysis_dict as _cost_analysis
 from repro.models import model as MD
 from repro.models.config import ModelConfig, MoEConfig
 
@@ -24,7 +25,7 @@ def _fwd_flops_compiled(cfg, b, s, unroll):
             return MD.forward(p, cfg, tokens=t, attn_impl="full")
 
         comp = jax.jit(f).lower(params, toks).compile()
-        return float(comp.cost_analysis()["flops"])
+        return float(_cost_analysis(comp)["flops"])
     finally:
         MD.SCAN_UNROLL = old
 
@@ -40,8 +41,8 @@ class TestWhileLoopUndercount:
             return f
         x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
         w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-        f5 = jax.jit(make(5)).lower(x, w).compile().cost_analysis()["flops"]
-        f10 = jax.jit(make(10)).lower(x, w).compile().cost_analysis()["flops"]
+        f5 = _cost_analysis(jax.jit(make(5)).lower(x, w).compile())["flops"]
+        f10 = _cost_analysis(jax.jit(make(10)).lower(x, w).compile())["flops"]
         assert f5 == f10  # trip count is NOT multiplied
 
 

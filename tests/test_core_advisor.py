@@ -1,5 +1,7 @@
 """Integration + property tests for candidate selection, enumeration, DTAc."""
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AdvisorOptions, DesignAdvisor, IndexDef,

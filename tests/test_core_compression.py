@@ -1,6 +1,8 @@
 """Unit + property tests for compression methods, SampleCF and deduction."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (METHODS, IndexDef, SampleManager, make_tpch_like,

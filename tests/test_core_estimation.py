@@ -3,6 +3,8 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (EstimationPlanner, IndexDef, NodeKey, SampleManager,

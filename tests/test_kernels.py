@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
