@@ -7,6 +7,7 @@
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
 from .cost_engine import CostEngine
+from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
 from .relation import ColumnDef, IndexDef, Predicate, Table
 from .samplecf import SampleManager, sample_cf
@@ -19,6 +20,7 @@ from .workload import BulkInsert, Query, Workload, make_scaled_workload, \
 __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
+    "EstimationEngine", "batched_sample_cf",
     "EstimationPlanner", "NodeKey", "Plan", "State",
     "ColumnDef", "IndexDef", "Predicate", "Table",
     "SampleManager", "sample_cf",

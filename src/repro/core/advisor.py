@@ -23,6 +23,7 @@ from .compression import DEFAULT_ADVISOR_METHODS
 from .cost_engine import CostEngine
 from .enumeration import (EnumerationResult, greedy_enumerate,
                           greedy_enumerate_scalar)
+from .estimation_engine import EstimationEngine
 from .estimation_graph import EstimationPlanner, NodeKey, Plan
 from .relation import IndexDef
 from .samplecf import SampleManager
@@ -46,6 +47,8 @@ class AdvisorOptions:
     sample_seed: int = 0
     use_engine: bool = True                # batched cost engine (hot path)
     engine_backend: str = "numpy"          # "numpy" | "jax"
+    use_batched_estimation: bool = True    # batched SampleCF engine (§4-§5)
+    estimation_backend: str = "numpy"      # "numpy" | "jax"
 
     @staticmethod
     def dta() -> "AdvisorOptions":
@@ -134,15 +137,26 @@ class DesignAdvisor:
         return self._candidate_universe()[2]
 
     # ------------------------------------------------------------------
-    def estimate_sizes(self, all_cands: Sequence[IndexDef]
-                       ) -> Tuple[float, Optional[Plan], int, int]:
-        """Register estimated sizes for every compressed candidate."""
+    @staticmethod
+    def estimation_targets(all_cands: Sequence[IndexDef]
+                           ) -> Dict[NodeKey, List[IndexDef]]:
+        """Size-estimation targets of a candidate set: the compressed,
+        predicate-free candidates, deduplicated (in order) into NodeKeys
+        mapped to their IndexDef variants.  Shared with the estimation
+        benchmark and parity tests so they measure exactly the target
+        set the advisor estimates."""
         tkey_to_defs: Dict[NodeKey, List[IndexDef]] = {}
         for idx in all_cands:
             if idx.compression is None or idx.predicate is not None:
                 continue
             k = NodeKey(idx.table, idx.cols, idx.compression)
             tkey_to_defs.setdefault(k, []).append(idx)
+        return tkey_to_defs
+
+    def estimate_sizes(self, all_cands: Sequence[IndexDef]
+                       ) -> Tuple[float, Optional[Plan], int, int]:
+        """Register estimated sizes for every compressed candidate."""
+        tkey_to_defs = self.estimation_targets(all_cands)
         targets = list(tkey_to_defs)
         if not targets:
             return 0.0, None, 0, 0
@@ -151,16 +165,16 @@ class DesignAdvisor:
         if self.opt.use_deduction:
             plan = planner.plan(targets, self.opt.e, self.opt.q)
         else:
-            # "All": SampleCF on every target (the paper's baseline)
-            from .estimation_graph import F_GRID
-            plan = None
-            for f in F_GRID:
-                p = planner.greedy(targets, f, self.opt.e, 1.1)  # q>1 forces
-                # q>1 makes every deduction fail the constraint => all sampled
-                if p.feasible or plan is None:
-                    plan = p
-                    break
-        ests = planner.execute(plan, self.samples)
+            # "All": SampleCF on every target (the paper's baseline),
+            # scanning the f grid for the cheapest fraction that satisfies
+            # the (e, q) constraint without deductions.
+            plan = planner.plan_all_sampled(targets, self.opt.e, self.opt.q)
+        if self.opt.use_batched_estimation:
+            engine = EstimationEngine(self.schema.tables, self.samples,
+                                      backend=self.opt.estimation_backend)
+            ests = planner.execute(plan, self.samples, engine=engine)
+        else:
+            ests = planner.execute_scalar(plan, self.samples)
         # execute() also resolves intermediate plan nodes; only register
         # sizes for defs that were actually requested as targets.
         for k, est in ests.items():

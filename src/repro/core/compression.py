@@ -10,14 +10,35 @@ on the index sort order (paper Figure 2).
 
 All sizes are *payload bytes*; the cost model converts bytes -> pages.
 Everything is vectorized NumPy so SampleCF and full-index sizing are cheap.
+
+Each scalar kernel `_<m>_bytes(col, width, rpp)` has a batched twin
+`<m>_bytes_batch(cols, widths, rpp)` operating on an (ntargets, nrows)
+column stack — one row per (target, column) job, all rows sharing the same
+rows-per-page — returning one payload-byte count per row.  The batched
+kernels are exact integer re-expressions of the scalar ones (asserted
+property-by-property in tests/test_core_compression.py) so the estimation
+engine built on them is byte-identical to per-target SampleCF.  An optional
+jax.jit backend mirrors `CostEngine(backend="jax")`: same formulas under
+`jax.numpy`, gated on jax availability + int64 (x64) support, with a silent
+NumPy fallback.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, Dict, Sequence
 
 import numpy as np
 
 from .relation import ROW_OVERHEAD, rows_per_page
+
+try:  # optional accelerator backend (repro.kernels idiom: gate, don't require)
+    import jax
+    import jax.numpy as jnp
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - jax is baked into the image
+    jax = None
+    jnp = None
+    HAVE_JAX = False
 
 ORD_IND = "ORD-IND"
 ORD_DEP = "ORD-DEP"
@@ -108,6 +129,228 @@ def _rle_bytes(col: np.ndarray, width: int, rpp: int) -> int:
     per_page = runs * (width + 2) + PAGE_META  # value + 2-byte run length
     cap = rows_in_page * width
     return int(np.sum(np.minimum(per_page, cap + PAGE_META)))
+
+
+# ---------------------------------------------------------------------------
+# Batched per-method kernels.  cols is an (ntargets, nrows) stack — one row
+# per (target, column) sizing job, every row in its target's index order —
+# widths is (ntargets,), rpp is shared by the whole stack (the estimation
+# engine groups jobs by rows-per-page).  Returns (ntargets,) payload bytes,
+# exactly equal to applying the scalar kernel row by row.
+# ---------------------------------------------------------------------------
+
+def _rows_in_pages(n: int, rpp: int) -> np.ndarray:
+    """Rows actually stored in each of the ceil(n/rpp) pages."""
+    npages = -(-n // rpp)
+    rows = np.full(npages, rpp, dtype=np.int64)
+    if n % rpp:
+        rows[-1] = n % rpp
+    return rows
+
+
+def _pages_batch(cols: np.ndarray, rpp: int) -> np.ndarray:
+    """(m, n) -> (m, npages, rpp), each row edge-padded with its last value."""
+    m, n = cols.shape
+    npages = -(-n // rpp)
+    pad = npages * rpp - n
+    if pad:
+        cols = np.concatenate([cols, np.repeat(cols[:, -1:], pad, axis=1)],
+                              axis=1)
+    return cols.reshape(m, npages, rpp)
+
+
+def _batch_io(cols, widths) -> tuple:
+    cols = np.asarray(cols, dtype=np.int64)
+    widths = np.asarray(widths, dtype=np.int64)
+    return cols, widths
+
+
+def ns_bytes_batch(cols: np.ndarray, widths: np.ndarray,
+                   rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    if cols.shape[1] == 0:
+        return np.zeros(cols.shape[0], dtype=np.int64)
+    sig = np.minimum(significant_bytes(cols), widths[:, None])
+    half_bytes = np.minimum(2 * sig + 1, 2 * widths[:, None])
+    return (half_bytes.sum(axis=1) + 1) // 2
+
+
+def gdict_bytes_batch(cols: np.ndarray, widths: np.ndarray,
+                      rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    m, n = cols.shape
+    if n == 0:
+        return np.zeros(m, dtype=np.int64)
+    srt = np.sort(cols, axis=1)
+    ndv = 1 + np.count_nonzero(np.diff(srt, axis=1), axis=1)
+    return ndv * widths + n * _ptr_bytes(ndv)
+
+
+def ldict_bytes_batch(cols: np.ndarray, widths: np.ndarray,
+                      rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    m, n = cols.shape
+    if n == 0:
+        return np.zeros(m, dtype=np.int64)
+    pages = _pages_batch(cols, rpp)
+    srt = np.sort(pages, axis=2)
+    ndv_p = 1 + np.count_nonzero(np.diff(srt, axis=2), axis=2)  # (m, npages)
+    rows = _rows_in_pages(n, rpp)[None, :]
+    w = widths[:, None]
+    per_page = ndv_p * w + rows * _ptr_bytes(ndv_p) + PAGE_META
+    cap = rows * w
+    return np.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+
+def prefix_bytes_batch(cols: np.ndarray, widths: np.ndarray,
+                       rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    m, n = cols.shape
+    if n == 0:
+        return np.zeros(m, dtype=np.int64)
+    pages = _pages_batch(cols, rpp)
+    mn = pages.min(axis=2).astype(np.uint64)
+    mx = pages.max(axis=2).astype(np.uint64)
+    xor = mn ^ mx
+    diff_bytes = np.where(xor == 0, 0, significant_bytes(xor))
+    rows = _rows_in_pages(n, rpp)[None, :]
+    w = widths[:, None]
+    common = np.maximum(w - diff_bytes, 0)
+    per_page = common + rows * (1 + w - common) + PAGE_META
+    cap = rows * w
+    return np.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+
+def rle_bytes_batch(cols: np.ndarray, widths: np.ndarray,
+                    rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    m, n = cols.shape
+    if n == 0:
+        return np.zeros(m, dtype=np.int64)
+    pages = _pages_batch(cols, rpp)
+    runs = 1 + np.count_nonzero(np.diff(pages, axis=2), axis=2)
+    rows = _rows_in_pages(n, rpp)[None, :]
+    w = widths[:, None]
+    per_page = runs * (w + 2) + PAGE_META
+    cap = rows * w
+    return np.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Optional jax.jit batch kernels (CostEngine(backend="jax") idiom).  All
+# codec math is int64, so the jax path additionally requires x64 mode; when
+# jax or x64 is unavailable the dispatcher falls back to NumPy.
+# ---------------------------------------------------------------------------
+
+def jax_batch_ready() -> bool:
+    """True when the jax batch kernels can run with exact int64 math."""
+    if not HAVE_JAX:
+        return False
+    try:
+        return jnp.asarray(np.int64(1)).dtype == jnp.int64
+    except Exception:  # pragma: no cover - defensive
+        return False
+
+
+if HAVE_JAX:
+    def _jax_significant_bytes(v):
+        out = jnp.ones(v.shape, dtype=jnp.int64)
+        for k in range(1, 8):
+            out += (v >= jnp.uint64(1 << (8 * k))).astype(jnp.int64)
+        return out
+
+    def _jax_pages(cols, rpp: int):
+        m, n = cols.shape
+        npages = -(-n // rpp)
+        pad = npages * rpp - n
+        if pad:
+            cols = jnp.concatenate(
+                [cols, jnp.repeat(cols[:, -1:], pad, axis=1)], axis=1)
+        return cols.reshape(m, npages, rpp)
+
+    @jax.jit
+    def _jax_ns_batch(cols, widths):
+        sig = jnp.minimum(_jax_significant_bytes(cols.astype(jnp.uint64)),
+                          widths[:, None])
+        half_bytes = jnp.minimum(2 * sig + 1, 2 * widths[:, None])
+        return (half_bytes.sum(axis=1) + 1) // 2
+
+    @jax.jit
+    def _jax_gdict_batch(cols, widths):
+        srt = jnp.sort(cols, axis=1)
+        ndv = 1 + jnp.count_nonzero(jnp.diff(srt, axis=1), axis=1)
+        ptr = jnp.where(ndv <= 256, 1, jnp.where(ndv <= 65536, 2, 3))
+        return ndv * widths + cols.shape[1] * ptr
+
+    @partial(jax.jit, static_argnames=("rpp",))
+    def _jax_ldict_batch(cols, widths, rows, rpp: int):
+        pages = _jax_pages(cols, rpp)
+        srt = jnp.sort(pages, axis=2)
+        ndv_p = 1 + jnp.count_nonzero(jnp.diff(srt, axis=2), axis=2)
+        ptr = jnp.where(ndv_p <= 256, 1, jnp.where(ndv_p <= 65536, 2, 3))
+        w = widths[:, None]
+        per_page = ndv_p * w + rows[None, :] * ptr + PAGE_META
+        cap = rows[None, :] * w
+        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+    @partial(jax.jit, static_argnames=("rpp",))
+    def _jax_prefix_batch(cols, widths, rows, rpp: int):
+        pages = _jax_pages(cols, rpp)
+        mn = pages.min(axis=2).astype(jnp.uint64)
+        mx = pages.max(axis=2).astype(jnp.uint64)
+        xor = mn ^ mx
+        diff_bytes = jnp.where(xor == 0, 0, _jax_significant_bytes(xor))
+        w = widths[:, None]
+        common = jnp.maximum(w - diff_bytes, 0)
+        per_page = common + rows[None, :] * (1 + w - common) + PAGE_META
+        cap = rows[None, :] * w
+        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+    @partial(jax.jit, static_argnames=("rpp",))
+    def _jax_rle_batch(cols, widths, rows, rpp: int):
+        pages = _jax_pages(cols, rpp)
+        runs = 1 + jnp.count_nonzero(jnp.diff(pages, axis=2), axis=2)
+        w = widths[:, None]
+        per_page = runs * (w + 2) + PAGE_META
+        cap = rows[None, :] * w
+        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
+
+    _JAX_PAGELESS = {"NS": _jax_ns_batch, "GDICT": _jax_gdict_batch}
+    _JAX_PAGED = {"LDICT": _jax_ldict_batch, "PREFIX": _jax_prefix_batch,
+                  "RLE": _jax_rle_batch}
+
+
+def _jax_batched_bytes(method: str, cols: np.ndarray, widths: np.ndarray,
+                       rpp: int) -> np.ndarray:
+    cols, widths = _batch_io(cols, widths)
+    m, n = cols.shape
+    if n == 0:
+        return np.zeros(m, dtype=np.int64)
+    if method in _JAX_PAGELESS:
+        out = _JAX_PAGELESS[method](jnp.asarray(cols), jnp.asarray(widths))
+    else:
+        rows = jnp.asarray(_rows_in_pages(n, rpp))
+        out = _JAX_PAGED[method](jnp.asarray(cols), jnp.asarray(widths),
+                                 rows, rpp)
+    return np.asarray(out, dtype=np.int64)
+
+
+BATCH_KERNELS: Dict[str, Callable[[np.ndarray, np.ndarray, int], np.ndarray]] \
+    = {
+    "NS": ns_bytes_batch,
+    "GDICT": gdict_bytes_batch,
+    "LDICT": ldict_bytes_batch,
+    "PREFIX": prefix_bytes_batch,
+    "RLE": rle_bytes_batch,
+}
+
+
+def batched_bytes(method: str, cols: np.ndarray, widths: np.ndarray,
+                  rpp: int, backend: str = "numpy") -> np.ndarray:
+    """Per-row payload bytes of `method` over an (ntargets, nrows) stack."""
+    if backend == "jax" and jax_batch_ready():
+        return _jax_batched_bytes(method, cols, widths, rpp)
+    return BATCH_KERNELS[method](cols, widths, rpp)
 
 
 class Method:

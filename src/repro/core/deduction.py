@@ -34,8 +34,13 @@ def index_nrows(table: Table, predicate=None) -> int:
 
 
 def uncompressed_size(table: Table, cols: Sequence[str]) -> float:
-    widths = [table.col_by_name[c].width for c in cols]
-    return float(uncompressed_payload_bytes(table.nrows, widths))
+    key = ("ded_usize", tuple(cols))
+    got = table._stats_cache.get(key)
+    if got is None:
+        widths = [table.col_by_name[c].width for c in cols]
+        got = float(uncompressed_payload_bytes(table.nrows, widths))
+        table._stats_cache[key] = got
+    return got
 
 
 def tuples_per_page(table: Table, cols: Sequence[str]) -> int:
@@ -82,10 +87,14 @@ def _dv_per_page(table: Table, index_cols: Tuple[str, ...], col: str) -> float:
 
 def replaced_fraction(table: Table, index_cols: Tuple[str, ...],
                       col: str) -> float:
-    """F(I_X, Y) = (T - DV) / T."""
-    t = tuples_per_page(table, index_cols)
-    dv = _dv_per_page(table, index_cols, col)
-    return max((t - dv) / t, 0.0)
+    """F(I_X, Y) = (T - DV) / T.  Pure in optimizer stats, so cached."""
+    key = ("ded_rf", index_cols, col)
+    got = table._stats_cache.get(key)
+    if got is None:
+        t = tuples_per_page(table, index_cols)
+        dv = _dv_per_page(table, index_cols, col)
+        got = table._stats_cache[key] = max((t - dv) / t, 0.0)
+    return got
 
 
 def colext_orddep_deduce(table: Table, target_cols: Tuple[str, ...],

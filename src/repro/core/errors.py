@@ -15,6 +15,7 @@ Every estimator's result, divided by the true size, is a random variable X
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable
 
@@ -55,6 +56,7 @@ _COLEXT = {
 }
 
 
+@functools.lru_cache(maxsize=None)
 def samplecf_bias(method: str, f: float) -> float:
     """Fitted E[X] of a raw SampleCF estimate (used for bias correction)."""
     fit = _SAMPLECF_FITS[METHODS[method].kind]
@@ -62,6 +64,7 @@ def samplecf_bias(method: str, f: float) -> float:
     return 1.0 + fit["bias"] * lf
 
 
+@functools.lru_cache(maxsize=None)
 def samplecf_error(method: str, f: float, corrected: bool = True) -> ErrorRV:
     """Error RV of SampleCF.  With `corrected` (the default), the estimate is
     divided by the fitted E[X], leaving mean 1 and a shrunk std."""
@@ -79,6 +82,7 @@ def colset_error() -> ErrorRV:
     return _COLSET
 
 
+@functools.lru_cache(maxsize=None)
 def colext_error(method: str, a: int) -> ErrorRV:
     kind = METHODS[method].kind
     fit = _COLEXT[kind]
@@ -102,6 +106,7 @@ def _phi(x: float) -> float:
     return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
 
 
+@functools.lru_cache(maxsize=65536)
 def prob_within(rv: ErrorRV, e: float) -> float:
     """P(1/(1+e) <= X <= 1+e) under N(mean, std^2)."""
     lo, hi = 1.0 / (1.0 + e), 1.0 + e

@@ -1,0 +1,296 @@
+"""Batched SampleCF: size estimation for many targets as array code.
+
+The scalar path (`repro.core.samplecf.sample_cf`) builds and compresses one
+index per call; an estimation plan with hundreds of SAMPLED targets pays a
+Python-level lexsort + five-odd NumPy kernel launches per target.  This
+engine computes every SAMPLED target of a plan in a handful of grouped
+kernel calls while staying byte-identical to the scalar reference.
+
+Batch dimensions, in the paper's terms:
+
+* **Group axis — (table, f):** the §4.1 amortization.  One uniform sample
+  of fraction `f` per table is drawn (via `SampleManager`, so the sampling
+  cost of §5.1 is paid once) and shared by every target on that table.
+* **Target axis — (cols, method):** each target is one compressed index
+  `I^c` whose SampleCF `CF = S^c / S` (§2.2) we estimate on the group's
+  sample.  The §5.1 estimation cost charged per target is unchanged: the
+  pages of the index built on the sample.
+* **Job axis — (prefix, column):** the unit of batched work.  A target
+  with key columns (c_0..c_k) needs, for each position j, the payload
+  bytes of column c_j laid out in the target's sort order.  That sequence
+  depends only on the key *prefix* (c_0..c_j) — lexicographic sort is
+  refined, not reordered, by trailing key columns — so targets sharing a
+  prefix share both the sort permutation and, for ORD-IND methods (which
+  ignore order entirely), the per-column byte counts.
+
+Concretely, per (table, f) group the engine:
+
+1. collects the distinct (method, prefix, rows-per-page) jobs of all
+   targets (ORD-IND jobs collapse to (method, column));
+2. materializes one `np.lexsort` permutation per *maximal* prefix and
+   reuses it for every shorter prefix it extends;
+3. stacks the permuted columns into (ntargets, nrows) matrices grouped by
+   (method, rows-per-page) and sizes them with the `*_bytes_batch` kernels
+   of `repro.core.compression` (NumPy, or the jax.jit backend mirroring
+   `CostEngine(backend="jax")`);
+4. assembles per-target compressed bytes, applies the same bias
+   correction (`errors.samplecf_bias`) and full-table scaling as
+   `sample_cf`, and returns `SizeEstimate`s that match the scalar path
+   float-for-float.
+
+Exactness (asserted in tests/test_estimation_engine.py and in
+benchmarks/estimation_scaling.py): per-column integer byte counts equal the
+scalar kernels', so `cf`, `est_bytes` and `cost_pages` are byte-identical.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import compression, errors
+from .relation import IndexDef, Table, rows_per_page, uncompressed_pages
+from .samplecf import SampleManager, SizeEstimate
+
+# (cols, method) — method None means "uncompressed" (CF = 1.0)
+TargetSpec = Tuple[Tuple[str, ...], Optional[str]]
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "jax" and not compression.jax_batch_ready():
+        return "numpy"
+    return backend
+
+
+def _prefix_permutations(sample: Table,
+                         prefixes: Sequence[Tuple[str, ...]]
+                         ) -> Dict[Tuple[str, ...], np.ndarray]:
+    """One sort order per *maximal* prefix; shorter prefixes reuse it.
+
+    Valid because a lexicographic sort by (c_0..c_k) orders the (c_0..c_j)
+    tuples, j <= k, exactly as a sort by (c_0..c_j) does — trailing key
+    columns only permute rows *within* groups of equal (c_0..c_j) values,
+    where c_j is constant.
+
+    The maximal prefixes themselves are sorted in ONE grouped call: each
+    column is replaced by its dense rank (order-isomorphic, so the
+    permutation is unchanged), ranks are bit-packed into a single int64
+    key per prefix, and a stable row-wise argsort sorts the whole
+    (nprefixes, nrows) key matrix at once.  A prefix whose packed ranks
+    exceed 63 bits falls back to np.lexsort — both are stable sorts of the
+    same key sequence, hence the identical permutation.
+    """
+    uniq = set(prefixes)
+    parents = {p[:-1] for p in uniq if len(p) > 1}
+    maximal = [p for p in uniq if p not in parents]
+
+    ranks: Dict[str, np.ndarray] = {}
+    bits: Dict[str, int] = {}
+
+    def rank_of(c: str) -> np.ndarray:
+        r = ranks.get(c)
+        if r is None:
+            u, inv = np.unique(sample.values[c], return_inverse=True)
+            r = ranks[c] = inv.astype(np.int64, copy=False)
+            bits[c] = max(int(u.size - 1).bit_length(), 1)
+        return r
+
+    out: Dict[Tuple[str, ...], np.ndarray] = {}
+    packable: List[Tuple[str, ...]] = []
+    for p in maximal:
+        for c in p:
+            rank_of(c)
+        if sum(bits[c] for c in p) <= 63:
+            packable.append(p)
+        else:
+            out[p] = np.lexsort([sample.values[c] for c in reversed(p)])
+    if packable:
+        # depth-wise batched packing: keys[i] = fold over p of (k << b) | r
+        cols_used = sorted(ranks)
+        cidx = {c: i for i, c in enumerate(cols_used)}
+        rmat = np.stack([ranks[c] for c in cols_used])
+        bvec = np.array([bits[c] for c in cols_used], dtype=np.int64)
+        keys = rmat[[cidx[p[0]] for p in packable]].copy()
+        maxlen = max(len(p) for p in packable)
+        for d in range(1, maxlen):
+            sel = np.array([i for i, p in enumerate(packable) if len(p) > d])
+            if not sel.size:
+                continue
+            ci = np.array([cidx[packable[i][d]] for i in sel])
+            keys[sel] = (keys[sel] << bvec[ci, None]) | rmat[ci]
+        perms = np.argsort(keys, axis=1, kind="stable")
+        for i, p in enumerate(packable):
+            out[p] = perms[i]
+    # every needed non-maximal prefix is an ancestor of some maximal one
+    for p in maximal:
+        perm = out[p]
+        for j in range(len(p) - 1, 0, -1):
+            anc = p[:j]
+            if anc in uniq and anc not in out:
+                out[anc] = perm
+    return out
+
+
+def batched_sample_cf(table: Table, sample: Table,
+                      specs: Sequence[TargetSpec], f: float,
+                      bias_correct: bool = True,
+                      backend: str = "numpy") -> List[SizeEstimate]:
+    """SampleCF for every (cols, method) spec on one shared sample.
+
+    `table` provides column widths and the full-index row count used to
+    scale CF back up (§2.2); `sample` is the (table, f) sample the indexes
+    are built on.  Returns estimates aligned with `specs`, byte-identical
+    to calling `sample_cf` per target.
+    """
+    n = sample.nrows
+    widths_of = {c.name: table.col_by_name[c.name].width
+                 for c in sample.columns}
+
+    def rpp_key(rpp: int) -> int:
+        # Any rows-per-page >= n yields a single page holding all n rows,
+        # and single-page sizes are rpp-independent (padding repeats the
+        # last value, which adds no distinct values, runs, or min/max
+        # movement) — so such jobs collapse into one per (method, prefix).
+        return rpp if 0 < rpp < n else max(n, 1)
+
+    # ---- collect the distinct sizing jobs across all targets ----
+    ordind_jobs = set()           # (method, col)
+    orddep_jobs = set()           # (method, prefix, rpp_key)
+    for cols, method in specs:
+        if method is None:
+            continue
+        rpp = rpp_key(rows_per_page(sum(widths_of[c] for c in cols)))
+        order_dep = compression.METHODS[method].order_dependent
+        for j, c in enumerate(cols):
+            if order_dep:
+                orddep_jobs.add((method, cols[:j + 1], rpp))
+            else:
+                ordind_jobs.add((method, c))
+
+    # ---- closed forms for single-page order-dependent jobs ----
+    # When the whole sample fits in one page, LDICT's page dictionary sees
+    # the column's full multiset (ndv) and PREFIX sees its global min/max —
+    # both independent of the sort order — so these jobs reduce to O(1)
+    # arithmetic on per-column stats the sample Table already caches.
+    col_bytes: Dict[Tuple, int] = {}
+    kernel_jobs = set()
+    single = max(n, 1)
+    for job in orddep_jobs:
+        method, prefix, rpp = job
+        c = prefix[-1]
+        w = widths_of[c]
+        cap = n * w + compression.PAGE_META
+        if rpp == single and method == "LDICT":
+            ndv = sample.ndv([c])
+            ptr = int(compression._ptr_bytes(ndv))
+            col_bytes[job] = min(ndv * w + n * ptr + compression.PAGE_META,
+                                 cap)
+        elif rpp == single and method == "PREFIX":
+            mn, mx = sample.minmax(c)
+            # uint64 semantics, like the kernel's significant_bytes cast
+            # (Table enforces non-negative values, so this is defensive)
+            xor = (mn ^ mx) & 0xFFFFFFFFFFFFFFFF
+            diff_bytes = (xor.bit_length() + 7) // 8  # significant_bytes
+            common = max(w - diff_bytes, 0)
+            col_bytes[job] = min(
+                common + n * (1 + w - common) + compression.PAGE_META, cap)
+        else:
+            kernel_jobs.add(job)
+
+    perms = _prefix_permutations(
+        sample, [p for (_, p, _) in kernel_jobs]) if kernel_jobs else {}
+
+    # ---- grouped kernel calls ----
+    by_method: Dict[str, List[Tuple[str, ...]]] = {}
+    for method, c in ordind_jobs:
+        by_method.setdefault(method, []).append(c)
+    for method, jcols in by_method.items():
+        # ORD-IND sizes ignore row order: use raw sample order
+        mat = np.stack([sample.values[c] for c in jcols])
+        w = np.array([widths_of[c] for c in jcols], dtype=np.int64)
+        got = compression.batched_bytes(method, mat, w, rows_per_page(1),
+                                        backend=backend)
+        for c, b in zip(jcols, got):
+            col_bytes[(method, c)] = int(b)
+
+    by_group: Dict[Tuple[str, int], List[Tuple[str, ...]]] = {}
+    for method, prefix, rpp in kernel_jobs:
+        by_group.setdefault((method, rpp), []).append(prefix)
+    for (method, rpp), prefixes in by_group.items():
+        mat = np.stack([sample.values[p[-1]][perms[p]] for p in prefixes])
+        w = np.array([widths_of[p[-1]] for p in prefixes], dtype=np.int64)
+        got = compression.batched_bytes(method, mat, w, rpp, backend=backend)
+        for p, b in zip(prefixes, got):
+            col_bytes[(method, p, rpp)] = int(b)
+
+    # ---- per-target assembly (same float ops, same order, as sample_cf) --
+    colset_cache: Dict[Tuple[str, ...], Tuple] = {}
+
+    def colset_consts(cols: Tuple[str, ...]) -> Tuple:
+        got = colset_cache.get(cols)
+        if got is None:
+            widths = [widths_of[c] for c in cols]
+            got = colset_cache[cols] = (
+                rpp_key(rows_per_page(sum(widths))),
+                compression.uncompressed_payload_bytes(n, widths),
+                compression.uncompressed_payload_bytes(table.nrows, widths),
+                float(uncompressed_pages(n, widths)))
+        return got
+
+    out: List[SizeEstimate] = []
+    for cols, method in specs:
+        rpp, s, full_bytes, cost = colset_consts(tuple(cols))
+        if method is None or n == 0 or s == 0:
+            cf = 1.0
+        else:
+            order_dep = compression.METHODS[method].order_dependent
+            sc = n * compression.ROW_OVERHEAD
+            for j, c in enumerate(cols):
+                sc += col_bytes[(method, cols[:j + 1], rpp)] if order_dep \
+                    else col_bytes[(method, c)]
+            cf = sc / s
+            if bias_correct:
+                cf = min(cf / errors.samplecf_bias(method, f), 1.0)
+        out.append(SizeEstimate(
+            index=IndexDef(table.name, tuple(cols), method),
+            est_bytes=cf * full_bytes, method="samplecf",
+            cost_pages=cost, cf=cf))
+    return out
+
+
+class EstimationEngine:
+    """Batched SampleCF over a schema and an amortized sample store.
+
+    Accepts any target objects carrying `.table`, `.cols` and `.method`
+    (`estimation_graph.NodeKey` in the advisor pipeline) and estimates all
+    of them per (table, f) group in grouped kernel calls.
+    """
+
+    def __init__(self, tables: Dict[str, Table],
+                 manager: Optional[SampleManager] = None,
+                 backend: str = "numpy", seed: int = 0):
+        self.tables = dict(tables)
+        self.manager = manager if manager is not None else \
+            SampleManager(self.tables, seed=seed)
+        self.backend = _resolve_backend(backend)
+        self.batch_calls = 0        # per-(table, f) group batches run
+        self.targets_estimated = 0  # total targets sized through the engine
+
+    def estimate_batch(self, targets: Sequence, f: float,
+                       bias_correct: bool = True) -> Dict:
+        """SizeEstimate for every target, keyed by the target objects."""
+        by_table: Dict[str, List] = {}
+        for t in targets:
+            by_table.setdefault(t.table, []).append(t)
+        out: Dict = {}
+        for tname, ts in by_table.items():
+            sample = self.manager.get_sample(tname, f)
+            ests = batched_sample_cf(
+                self.tables[tname], sample, [(t.cols, t.method) for t in ts],
+                f, bias_correct=bias_correct, backend=self.backend)
+            out.update(zip(ts, ests))
+            self.batch_calls += 1
+            self.targets_estimated += len(ts)
+        return out

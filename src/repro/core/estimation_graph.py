@@ -12,16 +12,22 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import deduction as ded
 from . import errors as err
 from .compression import METHODS
+from .estimation_engine import EstimationEngine
 from .relation import IndexDef, Table, uncompressed_pages
 from .samplecf import SampleManager, SizeEstimate, sample_cf
 
 F_GRID = (0.01, 0.025, 0.05, 0.075, 0.10)
+
+# q strictly above any probability: every deduction fails the constraint, so
+# greedy degenerates to SampleCF-on-everything (the paper's "All" baseline).
+FORCE_ALL_Q = 1.1
 
 
 class State(enum.Enum):
@@ -36,6 +42,15 @@ class NodeKey:
     table: str
     cols: Tuple[str, ...]
     method: str
+
+    def __hash__(self) -> int:
+        # NodeKeys are hashed millions of times per greedy run; cache the
+        # field-tuple hash on first use (frozen blocks plain assignment).
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.table, self.cols, self.method))
+            object.__setattr__(self, "_hash", h)
+        return h
 
     def label(self) -> str:
         return f"{self.table}({','.join(self.cols)})^{self.method}"
@@ -82,39 +97,64 @@ def sampling_cost(table: Table, key: NodeKey, f: float) -> float:
     return float(uncompressed_pages(n, widths))
 
 
+@functools.lru_cache(maxsize=65536)
+def _colext_deductions(key: NodeKey) -> Tuple[Deduction, ...]:
+    """ColExt partitions of `key` (pure in the key, so cached globally)."""
+    cols = key.cols
+    if len(cols) < 2:
+        return ()
+    partitions = {tuple((c,) for c in cols)}
+    partitions.add((cols[:-1], (cols[-1],)))
+    partitions.add(((cols[0],), cols[1:]))
+    return tuple(
+        Deduction("colext",
+                  tuple(NodeKey(key.table, p, key.method) for p in parts),
+                  parts)
+        for parts in sorted(partitions))
+
+
+def _colset_deductions(key: NodeKey, mates: Sequence[NodeKey]
+                       ) -> List[Deduction]:
+    """ColSet deductions from `mates` (same table/column-set/method nodes)."""
+    if METHODS[key.method].order_dependent:
+        return []
+    return [Deduction("colset", (other,), (other.cols,))
+            for other in mates if other.cols != key.cols]
+
+
 def candidate_deductions(key: NodeKey, present: Sequence[NodeKey]
                          ) -> List[Deduction]:
     """Enumerate deductions for `key` (bounded, per §5.2 Figure 3).
 
     * ColSet: any present node with the same column SET + method (ORD-IND).
     * ColExt partitions: all singletons; (prefix, last); (first, rest).
+
+    The greedy loop maintains a (table, column-set, method) index over its
+    node set and calls the two halves directly; this scanning form is kept
+    for callers holding a plain node list (`optimal`, tests).
     """
-    out: List[Deduction] = []
-    cols = key.cols
-    if not METHODS[key.method].order_dependent:
-        cs = frozenset(cols)
-        for other in present:
-            if (other.table == key.table and other.method == key.method
-                    and other.cols != cols and frozenset(other.cols) == cs):
-                out.append(Deduction("colset", (other,), (other.cols,)))
-    if len(cols) >= 2:
-        partitions = {tuple((c,) for c in cols)}
-        partitions.add((cols[:-1], (cols[-1],)))
-        partitions.add(((cols[0],), cols[1:]))
-        for parts in sorted(partitions):
-            children = tuple(NodeKey(key.table, p, key.method) for p in parts)
-            out.append(Deduction("colext", children, parts))
-    return out
+    cs = frozenset(key.cols)
+    mates = [o for o in present
+             if o.table == key.table and o.method == key.method
+             and frozenset(o.cols) == cs]
+    return _colset_deductions(key, mates) + list(_colext_deductions(key))
+
+
+@functools.lru_cache(maxsize=65536)
+def _compose_cached(rvs: Tuple[err.ErrorRV, ...]) -> err.ErrorRV:
+    # samplecf_error/colext_error are memoized, so the same ErrorRV objects
+    # recur across targets and f values; cache their Goodman composition.
+    return err.compose(rvs)
 
 
 def _deduction_rv(key: NodeKey, d: Deduction,
                   nodes: Dict[NodeKey, Node]) -> err.ErrorRV:
-    child_rvs = [nodes[c].rv for c in d.children]
+    child_rvs = tuple(nodes[c].rv for c in d.children)
     if d.kind == "colset":
         drv = err.colset_error()
     else:
         drv = err.colext_error(key.method, len(d.children))
-    return err.compose(child_rvs + [drv])
+    return _compose_cached(child_rvs + (drv,))
 
 
 class EstimationPlanner:
@@ -124,6 +164,15 @@ class EstimationPlanner:
                  existing: Optional[Dict[NodeKey, float]] = None):
         self.tables = tables
         self.existing = dict(existing or {})
+        self._scost: Dict[Tuple[str, Tuple[str, ...], float], float] = {}
+
+    def _sampling_cost(self, key: NodeKey, f: float) -> float:
+        ck = (key.table, key.cols, f)
+        c = self._scost.get(ck)
+        if c is None:
+            c = self._scost[ck] = sampling_cost(self.tables[key.table],
+                                                key, f)
+        return c
 
     # ------------------------------------------------------------------
     # Greedy algorithm (paper §5.2 pseudocode)
@@ -131,19 +180,31 @@ class EstimationPlanner:
     def greedy(self, targets: Sequence[NodeKey], f: float, e: float,
                q: float) -> Plan:
         nodes: Dict[NodeKey, Node] = {}
+        # (table, column set, method) -> nodes, in insertion order: the
+        # ColSet mate lookup without scanning the whole node dict.
+        by_set: Dict[Tuple[str, frozenset, str], List[NodeKey]] = {}
+
+        def index_key(k: NodeKey) -> None:
+            by_set.setdefault((k.table, frozenset(k.cols), k.method),
+                              []).append(k)
+
         # Line 1: existing indexes enter as SAMPLED (zero error / zero cost;
         # we use the dedicated EXACT state).
         for k, size in self.existing.items():
             nodes[k] = Node(k, State.EXACT, rv=err.EXACT, exact_bytes=size)
+            index_key(k)
         # Line 2: targets start as NONE.
         for t in targets:
             if t not in nodes:
                 nodes[t] = Node(t)
+                index_key(t)
 
         def ensure(k: NodeKey) -> Node:
-            if k not in nodes:
-                nodes[k] = Node(k)
-            return nodes[k]
+            n = nodes.get(k)
+            if n is None:
+                n = nodes[k] = Node(k)
+                index_key(k)
+            return n
 
         def known(n: Node) -> bool:
             return n.state in (State.SAMPLED, State.DEDUCED, State.EXACT)
@@ -155,11 +216,11 @@ class EstimationPlanner:
         order = sorted(targets, key=lambda k: (len(k.cols), k.cols))
         for t in order:
             node = nodes[t]
-            table = self.tables[t.table]
             if known(node):
                 continue
             # Lines 4-5: materialize candidate deductions + children.
-            cands = candidate_deductions(t, list(nodes))
+            mates = by_set.get((t.table, frozenset(t.cols), t.method), ())
+            cands = _colset_deductions(t, mates) + list(_colext_deductions(t))
             for d in cands:
                 for c in d.children:
                     ensure(c)
@@ -181,22 +242,22 @@ class EstimationPlanner:
 
             # Lines 8-9: enable a deduction by sampling its unknown children
             # if that is cheaper than sampling this node.
-            my_cost = sampling_cost(table, t, f)
+            my_cost = self._sampling_cost(t, f)
             best_d, best_cost = None, my_cost
             for d in cands:
                 unknown = [c for c in d.children if not known(nodes[c])]
                 if not unknown:
                     continue  # handled above (did not satisfy constraint)
-                extra = sum(sampling_cost(self.tables[c.table], c, f)
-                            for c in unknown)
+                extra = sum(self._sampling_cost(c, f) for c in unknown)
                 if extra >= best_cost:
                     continue
                 # hypothetical rvs with the unknown children sampled
                 trial = {c: err.samplecf_error(c.method, f) for c in unknown}
-                child_rvs = [trial.get(c, nodes[c].rv) for c in d.children]
+                child_rvs = tuple(trial.get(c, nodes[c].rv)
+                                  for c in d.children)
                 drv = (err.colset_error() if d.kind == "colset"
                        else err.colext_error(t.method, len(d.children)))
-                rv = err.compose(child_rvs + [drv])
+                rv = _compose_cached(child_rvs + (drv,))
                 if err.prob_within(rv, e) >= q:
                     best_d, best_cost = d, extra
             if best_d is not None:
@@ -205,7 +266,7 @@ class EstimationPlanner:
                     if not known(cn):
                         cn.state = State.SAMPLED
                         cn.rv = err.samplecf_error(c.method, f)
-                        total_cost += sampling_cost(self.tables[c.table], c, f)
+                        total_cost += self._sampling_cost(c, f)
                 node.state = State.DEDUCED
                 node.chosen = best_d
                 node.rv = _deduction_rv(t, best_d, nodes)
@@ -226,7 +287,7 @@ class EstimationPlanner:
             if k in tset or k in used_as_child or n.state is State.EXACT:
                 continue
             if n.state is State.SAMPLED:
-                total_cost -= sampling_cost(self.tables[k.table], k, f)
+                total_cost -= self._sampling_cost(k, f)
             del nodes[k]
 
         for t in targets:
@@ -247,6 +308,31 @@ class EstimationPlanner:
             if fallback is None or p.total_cost < fallback.total_cost:
                 fallback = p
         return best if best is not None else fallback  # type: ignore
+
+    def plan_all_sampled(self, targets: Sequence[NodeKey], e: float,
+                         q: float, f_grid: Sequence[float] = F_GRID) -> Plan:
+        """The paper's "All" baseline: SampleCF on every target, no
+        deductions.
+
+        Scans the sampling-fraction grid cheapest-first and returns the
+        first all-sampled plan whose per-target SampleCF error satisfies
+        the real (e, q) constraint; if no grid fraction does, falls back
+        to the cheapest all-sampled plan, flagged infeasible.  (Sampling
+        is forced by running greedy with q > 1, under which no deduction
+        can satisfy the constraint — feasibility is then re-checked
+        against the caller's q.)
+        """
+        fallback: Optional[Plan] = None
+        for f in f_grid:
+            p = self.greedy(targets, f, e, FORCE_ALL_Q)
+            feasible = all(err.satisfies(p.nodes[t].rv, e, q)
+                           for t in targets)
+            p = dataclasses.replace(p, feasible=feasible)
+            if feasible:
+                return p
+            if fallback is None or p.total_cost < fallback.total_cost:
+                fallback = p
+        return fallback  # type: ignore
 
     # ------------------------------------------------------------------
     # Optimal exact algorithm (Appendix D) — exponential; benchmarks only.
@@ -330,8 +416,35 @@ class EstimationPlanner:
     # ------------------------------------------------------------------
     # Plan execution: run SampleCF / deductions, produce actual sizes.
     # ------------------------------------------------------------------
-    def execute(self, plan: Plan, manager: SampleManager
+    def execute(self, plan: Plan, manager: SampleManager,
+                engine: Optional[EstimationEngine] = None
                 ) -> Dict[NodeKey, SizeEstimate]:
+        """Execute `plan` with the batched SampleCF engine (default).
+
+        All SAMPLED nodes are estimated in grouped kernel calls (one batch
+        per (table, f) group — byte-identical to the scalar reference,
+        see `execute_scalar`); deductions then resolve from those.
+        """
+        if engine is None:
+            engine = EstimationEngine(self.tables, manager)
+        # a supplied engine must draw from the caller's sample store, or
+        # the byte-identical contract with execute_scalar(manager) breaks
+        assert engine.manager is manager, \
+            "engine.manager must be the manager passed to execute()"
+        sampled = [k for k, n in plan.nodes.items()
+                   if n.state is State.SAMPLED]
+        pre = engine.estimate_batch(sampled, plan.f)
+        return self._resolve_plan(plan, pre.__getitem__)
+
+    def execute_scalar(self, plan: Plan, manager: SampleManager
+                       ) -> Dict[NodeKey, SizeEstimate]:
+        """Exact-parity reference: one `sample_cf` call per SAMPLED node."""
+        return self._resolve_plan(
+            plan, lambda k: sample_cf(
+                manager, IndexDef(k.table, k.cols, k.method), plan.f))
+
+    def _resolve_plan(self, plan: Plan, sampled_est
+                      ) -> Dict[NodeKey, SizeEstimate]:
         out: Dict[NodeKey, SizeEstimate] = {}
 
         def resolve(k: NodeKey) -> SizeEstimate:
@@ -345,8 +458,7 @@ class EstimationPlanner:
                     est_bytes=float(node.exact_bytes), method="exact",
                     cost_pages=0.0, cf=0.0)
             elif node.state is State.SAMPLED:
-                idx = IndexDef(k.table, k.cols, k.method)
-                est = sample_cf(manager, idx, plan.f)
+                est = sampled_est(k)
             else:  # DEDUCED
                 d = node.chosen
                 assert d is not None

@@ -15,8 +15,9 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from . import compression, distinct
+from .estimation_engine import batched_sample_cf
 from .relation import ColumnDef, IndexDef, Predicate, Table
-from .samplecf import SampleManager, SizeEstimate, sample_cf
+from .samplecf import SampleManager, SizeEstimate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,11 +140,11 @@ class SynopsisManager:
                       method: Optional[str], f: float) -> SizeEstimate:
         """SampleCF for an index on an MV, scaled by the AE cardinality."""
         smv, n_est = self.mv_sample(mv, f)
-        idx = IndexDef(table=smv.name, cols=idx_cols, compression=method)
-        mgr = SampleManager({smv.name: smv})
-        est = sample_cf(mgr, idx, 1.0, sample_table=smv)
+        # the MV sample IS the whole "table" here (f=1): batched core with
+        # a single (cols, method) spec, then rescale by the AE cardinality
+        est = batched_sample_cf(smv, smv, [(idx_cols, method)], f=1.0)[0]
         widths = [smv.col_by_name[c].width for c in idx_cols]
         full = compression.uncompressed_payload_bytes(int(n_est), widths)
-        return SizeEstimate(index=idx, est_bytes=est.cf * full,
+        return SizeEstimate(index=est.index, est_bytes=est.cf * full,
                             method="samplecf:mv", cost_pages=est.cost_pages,
                             cf=est.cf)

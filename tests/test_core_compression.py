@@ -89,6 +89,82 @@ class TestCompressionMethods:
         assert a == b
 
 
+class TestBatchKernelProperties:
+    """Hypothesis properties for the five *_bytes_batch codec kernels
+    (deterministic seed-parametrized twins run unguarded in
+    tests/test_estimation_engine.py)."""
+
+    @staticmethod
+    def _random_stack(rng, m, n):
+        widths = rng.integers(1, 9, m)
+        cols = np.stack([
+            rng.integers(0, min(1 << (8 * int(w)), 1 << 62), n)
+            for w in widths])
+        return cols, widths
+
+    @given(st.sampled_from(sorted(METHODS)), st.integers(1, 5),
+           st.integers(2, 300), st.integers(1, 80), st.integers(0, 99))
+    @settings(max_examples=60, deadline=None)
+    def test_property_batch_equals_scalar(self, method, m, n, rpp, seed):
+        """Exact batch-vs-scalar equality on random column stacks."""
+        rng = np.random.default_rng(seed)
+        cols, widths = self._random_stack(rng, m, n)
+        got = C.BATCH_KERNELS[method](cols, widths, rpp)
+        want = [C.METHODS[method]._fn(cols[i], int(widths[i]), rpp)
+                for i in range(m)]
+        assert got.tolist() == want
+
+    @given(st.sampled_from(sorted(METHODS)), st.integers(2, 300),
+           st.integers(1, 80), st.integers(0, 99))
+    @settings(max_examples=60, deadline=None)
+    def test_property_compressed_leq_cap(self, method, n, rpp, seed):
+        """Compressed payload never exceeds the per-page uncompressed cap
+        (page methods pay PAGE_META per page; GDICT's dictionary pointers
+        are bounded by 3 bytes per row)."""
+        rng = np.random.default_rng(seed)
+        cols, widths = self._random_stack(rng, 3, n)
+        got = C.BATCH_KERNELS[method](cols, widths, rpp)
+        npages = -(-n // rpp)
+        for i in range(3):
+            w = int(widths[i])
+            if method == "NS":
+                cap = n * w
+            elif method == "GDICT":
+                cap = n * w + n * 3
+            else:
+                cap = n * w + npages * C.PAGE_META
+            assert got[i] <= cap
+
+    @given(st.sampled_from(["NS", "GDICT"]), st.integers(2, 300),
+           st.integers(1, 80), st.integers(0, 99))
+    @settings(max_examples=40, deadline=None)
+    def test_property_ord_ind_permutation_invariant(self, method, n, rpp,
+                                                    seed):
+        """ORD-IND batch kernels are invariant under row permutation."""
+        rng = np.random.default_rng(seed)
+        cols, widths = self._random_stack(rng, 3, n)
+        perm = np.stack([rng.permutation(cols[i]) for i in range(3)])
+        a = C.BATCH_KERNELS[method](cols, widths, rpp)
+        b = C.BATCH_KERNELS[method](perm, widths, rpp)
+        assert a.tolist() == b.tolist()
+
+    @given(st.sampled_from(["LDICT", "PREFIX", "RLE"]), st.integers(2, 8),
+           st.integers(2, 50), st.integers(2, 64))
+    @settings(max_examples=60, deadline=None)
+    def test_property_ord_dep_sensitive_to_order(self, method, w, ndv, rpp):
+        """ORD-DEP kernels are STRICTLY sensitive to the sort order: a
+        run-grouped layout (each page one value) always beats a perfect
+        interleave of the same multiset (each page >= 2 values)."""
+        vals = np.arange(ndv, dtype=np.int64) * (1 << (8 * (w - 1))) \
+            if w < 8 else np.arange(ndv, dtype=np.int64) << 55
+        grouped = np.repeat(vals, rpp)[None, :]
+        inter = np.tile(vals, rpp)[None, :]
+        widths = np.array([w])
+        g = C.BATCH_KERNELS[method](grouped, widths, rpp)[0]
+        i = C.BATCH_KERNELS[method](inter, widths, rpp)[0]
+        assert g < i
+
+
 class TestSampleCF:
     def test_amortized_sampling(self, schema):
         mgr = SampleManager(schema.tables, seed=0)

@@ -124,6 +124,51 @@ class TestPlanner:
         for t in targets:
             assert plan.nodes[t].state in (State.SAMPLED, State.DEDUCED)
 
+    @given(st.sampled_from(["NS", "LDICT"]), st.floats(0.1, 1.2),
+           st.floats(0.5, 0.99), st.sampled_from([0.025, 0.05, 0.10]))
+    @settings(max_examples=15, deadline=None)
+    def test_property_greedy_vs_optimal(self, method, e, q, f):
+        """Small graphs (paper App. D yardstick): optimal <= greedy <=
+        all-sampled, and any feasible plan satisfies (e, q) per target."""
+        schema = make_tpch_like(scale=0.2, z=0, seed=0)
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets(method)[:3]
+        g = planner.greedy(targets, f, e, q)
+        o = planner.optimal(targets, f, e, q)
+        from repro.core.estimation_graph import sampling_cost
+        all_cost = sum(sampling_cost(schema.tables[t.table], t, f)
+                       for t in targets)
+        assert o.total_cost <= g.total_cost + 1e-9
+        assert g.total_cost <= all_cost + 1e-9
+        for plan in (g, o):
+            if plan.feasible:
+                for t in targets:
+                    assert E.satisfies(plan.nodes[t].rv, e, q)
+            else:
+                assert any(not E.satisfies(plan.nodes[t].rv, e, q)
+                           for t in targets)
+
+    @given(st.sampled_from(["NS", "LDICT"]), st.floats(0.1, 0.8),
+           st.floats(0.6, 0.99))
+    @settings(max_examples=15, deadline=None)
+    def test_property_all_sampled_baseline(self, method, e, q):
+        """The "All" baseline samples everything and picks the first grid
+        fraction satisfying the caller's (e, q), falling back to the
+        cheapest (= smallest f) when none does."""
+        from repro.core.estimation_graph import F_GRID
+        schema = make_tpch_like(scale=0.2, z=0, seed=0)
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets(method)
+        plan = planner.plan_all_sampled(targets, e, q)
+        assert plan.n_deduced() == 0
+        assert plan.n_sampled() == len(targets)
+        feasible_f = [f for f in F_GRID
+                      if E.satisfies(E.samplecf_error(method, f), e, q)]
+        if feasible_f:
+            assert plan.feasible and plan.f == feasible_f[0]
+        else:
+            assert not plan.feasible and plan.f == F_GRID[0]
+
 
 class TestAdaptiveEstimator:
     def test_table1_ordering(self, schema):
