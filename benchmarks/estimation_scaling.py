@@ -1,20 +1,29 @@
-"""Estimation-phase scaling: per-target SampleCF vs the batched engine.
+"""Estimation-phase scaling: scalar planning + SampleCF vs the engines.
 
 Builds the N-statement synthetic workload (default 200), derives the same
 compressed-candidate targets `DesignAdvisor.estimate_sizes` would, and
-plans once with the §5 greedy graph search.  The gate times the SampleCF
-phase — the plan's SAMPLED targets estimated via the scalar per-target
-`sample_cf` loop vs ONE batched `EstimationEngine.estimate_batch` call —
-requiring >= 3x by default.  It then executes the full plan both ways
-(`EstimationPlanner.execute_scalar` vs `execute`) and asserts
-BYTE-IDENTICAL `SizeEstimate` fields (est_bytes, cf, cost_pages) for every
-resolved node, and reports the end-to-end `DesignAdvisor.estimate_sizes`
-wall time (planning + execution + deductions) both ways.
+gates BOTH batched phases:
+
+* **Planner phase (§5.2 greedy over the f grid):** the scalar reference
+  grid loop (`EstimationPlanner.greedy_scalar` per fraction, i.e.
+  `plan_scalar`) vs the batched `PlannerEngine` pass (`plan`), requiring
+  >= `--min-plan-speedup` (3x default).  PLAN-IDENTICAL parity — same
+  per-node states, same chosen deductions, same total_cost, for every
+  fraction — is asserted over the whole grid before the result counts.
+* **SampleCF phase:** the plan's SAMPLED targets estimated via the scalar
+  per-target `sample_cf` loop vs ONE batched
+  `EstimationEngine.estimate_batch` call, requiring >= `--min-speedup`
+  (3x default).  It then executes the full plan both ways
+  (`EstimationPlanner.execute_scalar` vs `execute`) and asserts
+  BYTE-IDENTICAL `SizeEstimate` fields (est_bytes, cf, cost_pages) for
+  every resolved node, and reports the end-to-end
+  `DesignAdvisor.estimate_sizes` wall time both ways.
 
 Both paths draw their samples from equal-seed SampleManagers (identical by
 SampleManager determinism, see tests/test_estimation_engine.py) and are
-timed best-of-`--repeats` on warm samples, so the comparison isolates the
-estimation work the engine batches.
+timed best-of-`--repeats` warm (samples drawn, lru/probability caches and
+the engine's shared deduction graph populated), so each comparison
+isolates the work the engines batch.
 
 Writes a machine-readable trajectory to BENCH_estimation.json so future
 PRs can track the estimation phase (smoke runs write
@@ -36,7 +45,8 @@ from repro.core import (AdvisorOptions, DesignAdvisor, IndexDef,
                         SampleManager, make_scaled_workload, make_tpch_like,
                         sample_cf)
 from repro.core.estimation_engine import EstimationEngine
-from repro.core.estimation_graph import EstimationPlanner, State
+from repro.core.estimation_graph import F_GRID, EstimationPlanner, State
+from repro.core.planner_engine import assert_plan_identical
 
 
 def advisor_targets(adv: DesignAdvisor) -> list:
@@ -46,16 +56,46 @@ def advisor_targets(adv: DesignAdvisor) -> list:
 
 
 def run(n_statements: int, scale: float, seed: int, backend: str,
-        min_speedup: float, repeats: int, out_path: Path) -> dict:
+        min_speedup: float, min_plan_speedup: float, repeats: int,
+        out_path: Path) -> dict:
     schema = make_tpch_like(scale=scale, z=0, seed=seed)
     wl = make_scaled_workload(schema, n_statements=n_statements, seed=seed)
     adv = DesignAdvisor(wl, AdvisorOptions.dtac())
     targets = advisor_targets(adv)
+    e, q = adv.opt.e, adv.opt.q
 
+    # The planner phase always runs the numpy scoring backend: it is the
+    # parity reference (the optional jax erf backend is documented as not
+    # bit-parity, which would invalidate the plan-identical asserts below).
+    # `--backend` selects the SampleCF estimation-engine backend only.
     planner = EstimationPlanner(schema.tables)
     t0 = time.perf_counter()
-    plan = planner.plan(targets, adv.opt.e, adv.opt.q)
-    plan_seconds = time.perf_counter() - t0
+    plan = planner.plan(targets, e, q)
+    plan_seconds = time.perf_counter() - t0  # cold: includes graph build
+
+    # ---- the planner phase: scalar greedy grid loop vs batched engine ----
+    # (best-of-repeats warm, mirroring the SampleCF-phase methodology: the
+    # scalar loop reuses its lru caches, the engine its shared graph)
+    plan_scalar_seconds = plan_batched_seconds = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        plan_s = planner.plan_scalar(targets, e, q)
+        plan_scalar_seconds = min(plan_scalar_seconds,
+                                  time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        plan_b = planner.plan(targets, e, q)
+        plan_batched_seconds = min(plan_batched_seconds,
+                                   time.perf_counter() - t0)
+    assert_plan_identical(plan_s, plan_b, "plan()")
+    # plan-identical parity for EVERY fraction on the grid
+    for f, ref, got in zip(F_GRID,
+                           [planner.greedy_scalar(targets, f, e, q)
+                            for f in F_GRID],
+                           planner.engine.greedy_batch(targets, e, q,
+                                                       F_GRID)):
+        assert_plan_identical(ref, got, f"greedy(f={f})")
+    plan_speedup = plan_scalar_seconds / max(plan_batched_seconds, 1e-12)
+
     sampled = [k for k, n in plan.nodes.items() if n.state is State.SAMPLED]
 
     # equal-seed managers -> identical samples; pre-warm so the timed loops
@@ -103,7 +143,8 @@ def run(n_statements: int, scale: float, seed: int, backend: str,
     adv_b.estimate_sizes(cands_b)
     e2e_batched = time.perf_counter() - t0
     adv_s = DesignAdvisor(wl, dataclasses.replace(
-        AdvisorOptions.dtac(), use_batched_estimation=False))
+        AdvisorOptions.dtac(), use_batched_estimation=False,
+        use_batched_planner=False))
     _, _, cands_s = adv_s._candidate_universe()
     t0 = time.perf_counter()
     adv_s.estimate_sizes(cands_s)
@@ -125,34 +166,48 @@ def run(n_statements: int, scale: float, seed: int, backend: str,
         "plan_f": plan.f,
         "plan_seconds": round(plan_seconds, 4),
         "scalar": {
+            "plan_seconds": round(plan_scalar_seconds, 4),
             "samplecf_seconds": round(scalar_seconds, 4),
             "estimate_sizes_seconds": round(e2e_scalar, 4),
         },
         "batched": {
+            "plan_seconds": round(plan_batched_seconds, 4),
             "samplecf_seconds": round(batched_seconds, 4),
             "estimate_sizes_seconds": round(e2e_batched, 4),
             "batch_calls": engine.batch_calls,
             "targets_estimated": engine.targets_estimated,
             "sampling_calls": mgr_b.sampling_calls,
         },
+        "plan_speedup": round(plan_speedup, 2),
         "speedup_samplecf": round(speedup, 2),
         "speedup_estimate_sizes": round(
             e2e_scalar / max(e2e_batched, 1e-12), 2),
-        # guarded by the assert loop above: the report is only written
-        # when every resolved node matched byte-for-byte
+        # guarded by the assert calls above: the report is only written
+        # when every plan matched plan-identically and every resolved
+        # node matched byte-for-byte
         "parity": {"byte_identical": True,
+                   "plan_identical": True,
                    "nodes_compared": len(ests_s)},
     }
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
+    ok = True
+    if plan_speedup < min_plan_speedup:
+        print(f"FAIL: planner-phase speedup {plan_speedup:.1f}x < required "
+              f"{min_plan_speedup:.1f}x", file=sys.stderr)
+        ok = False
+    else:
+        print(f"OK: planner-phase speedup {plan_speedup:.1f}x over "
+              f"{len(targets)} targets x {len(F_GRID)} fractions")
     if speedup < min_speedup:
         print(f"FAIL: SampleCF-phase speedup {speedup:.1f}x < required "
               f"{min_speedup:.1f}x", file=sys.stderr)
-        return report | {"ok": False}
-    print(f"OK: SampleCF-phase speedup {speedup:.1f}x over "
-          f"{len(sampled)} sampled targets "
-          f"({engine.batch_calls} batched group calls)")
-    return report | {"ok": True}
+        ok = False
+    else:
+        print(f"OK: SampleCF-phase speedup {speedup:.1f}x over "
+              f"{len(sampled)} sampled targets "
+              f"({engine.batch_calls} batched group calls)")
+    return report | {"ok": ok}
 
 
 def main() -> int:
@@ -160,8 +215,14 @@ def main() -> int:
     ap.add_argument("--statements", type=int, default=200)
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
-    ap.add_argument("--min-speedup", type=float, default=3.0)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="SampleCF estimation-engine backend (the planner "
+                    "phase always runs the numpy parity backend)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="SampleCF-phase gate (default 3.0; 1.0 in --smoke)")
+    ap.add_argument("--min-plan-speedup", type=float, default=None,
+                    help="planner-phase gate: scalar greedy grid loop vs "
+                    "batched PlannerEngine (default 3.0; 1.0 in --smoke)")
     ap.add_argument("--repeats", type=int, default=9,
                     help="timed passes per path; min is reported (resists "
                     "transient machine load)")
@@ -185,12 +246,18 @@ def main() -> int:
     if args.smoke:
         args.statements = 40
         args.scale = 0.1
-        args.min_speedup = 1.0
+    # explicit gate flags win; otherwise 3x full runs, relaxed 1x smoke
+    default_gate = 1.0 if args.smoke else 3.0
+    if args.min_speedup is None:
+        args.min_speedup = default_gate
+    if args.min_plan_speedup is None:
+        args.min_plan_speedup = default_gate
     if args.out is None:
         args.out = root / ("BENCH_estimation.smoke.json" if args.smoke
                            else "BENCH_estimation.json")
     report = run(args.statements, args.scale, args.seed, args.backend,
-                 args.min_speedup, args.repeats, args.out)
+                 args.min_speedup, args.min_plan_speedup, args.repeats,
+                 args.out)
     return 0 if report.get("ok") else 1
 
 

@@ -9,6 +9,7 @@ from .compression import DEFAULT_ADVISOR_METHODS, METHODS
 from .cost_engine import CostEngine
 from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
+from .planner_engine import PlannerEngine
 from .relation import ColumnDef, IndexDef, Predicate, Table
 from .samplecf import SampleManager, sample_cf
 from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
@@ -21,7 +22,7 @@ __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
     "EstimationEngine", "batched_sample_cf",
-    "EstimationPlanner", "NodeKey", "Plan", "State",
+    "EstimationPlanner", "NodeKey", "Plan", "State", "PlannerEngine",
     "ColumnDef", "IndexDef", "Predicate", "Table",
     "SampleManager", "sample_cf",
     "ForeignKey", "MVDef", "Schema", "SynopsisManager",

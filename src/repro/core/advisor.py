@@ -49,6 +49,8 @@ class AdvisorOptions:
     engine_backend: str = "numpy"          # "numpy" | "jax"
     use_batched_estimation: bool = True    # batched SampleCF engine (§4-§5)
     estimation_backend: str = "numpy"      # "numpy" | "jax"
+    use_batched_planner: bool = True       # batched §5.2 planner engine
+    planner_backend: str = "numpy"         # "numpy" | "jax"
 
     @staticmethod
     def dta() -> "AdvisorOptions":
@@ -161,7 +163,9 @@ class DesignAdvisor:
         if not targets:
             return 0.0, None, 0, 0
 
-        planner = EstimationPlanner(self.schema.tables)
+        planner = EstimationPlanner(self.schema.tables,
+                                    backend=self.opt.planner_backend,
+                                    use_engine=self.opt.use_batched_planner)
         if self.opt.use_deduction:
             plan = planner.plan(targets, self.opt.e, self.opt.q)
         else:

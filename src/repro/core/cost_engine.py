@@ -293,9 +293,12 @@ class CostEngine:
         self.batch_scores = 0     # vectorized pool-scoring calls
 
     # -- registration ----------------------------------------------------
-    def register(self, idxs: Iterable[IndexDef]) -> None:
-        for idx in idxs:
-            self.blocks[idx.table].add(idx, self.sizes)
+    def register(self, idxs: Iterable[IndexDef]) -> np.ndarray:
+        """Register every index; returns their engine column ids aligned
+        with the input (so callers can precompute id arrays once instead
+        of calling `id_of` per candidate per greedy step)."""
+        return np.array([self.blocks[idx.table].add(idx, self.sizes)
+                         for idx in idxs], dtype=np.int64)
 
     def id_of(self, idx: IndexDef) -> int:
         blk = self.blocks[idx.table]

@@ -23,6 +23,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Sequence, Tuple
 
+import numpy as np
+
 from .compression import METHODS, uncompressed_payload_bytes
 from .relation import Table, rows_per_page
 
@@ -97,6 +99,39 @@ def replaced_fraction(table: Table, index_cols: Tuple[str, ...],
     return got
 
 
+def replaced_fraction_batch(table: Table, index_cols: Tuple[str, ...],
+                            cols: Sequence[str]) -> np.ndarray:
+    """F(I_X, Y) for every Y in `cols` of index X, in one array pass.
+
+    Gathers the per-prefix run lengths (cached table stats) once and
+    evaluates the §4.2 DV formula over column vectors; element-for-element
+    identical to `replaced_fraction` (same cache, same float ops), it just
+    removes the per-column Python dispatch from the ColExt deduction path.
+    """
+    missing = [c for c in cols
+               if ("ded_rf", index_cols, c) not in table._stats_cache]
+    if missing:
+        t = tuples_per_page(table, index_cols)
+        tf = float(t)
+        pos = {c: index_cols.index(c) for c in missing}
+        L = np.array([_avg_run_length(table, index_cols[:pos[c] + 1])
+                      for c in missing])
+        long_runs = L > 1.0
+        dv = np.minimum(tf, np.ceil(t / np.where(long_runs, L, 1.0)))
+        if not long_runs.all():
+            # dice-throw branch stays scalar: numpy's pow detects integral
+            # exponents and switches to repeated squaring, which is not
+            # bit-identical to CPython's libm pow in `_dv_per_page`
+            for i in np.nonzero(~long_runs)[0].tolist():
+                y = table.ndv([missing[i]])
+                dv[i] = y - y * (1.0 - 1.0 / max(y, 1)) ** t
+        frac = np.maximum((t - dv) / t, 0.0)
+        for c, v in zip(missing, frac.tolist()):
+            table._stats_cache[("ded_rf", index_cols, c)] = v
+    return np.array([table._stats_cache[("ded_rf", index_cols, c)]
+                     for c in cols])
+
+
 def colext_orddep_deduce(table: Table, target_cols: Tuple[str, ...],
                          parts: Sequence[Tuple[Tuple[str, ...], float]]) -> float:
     """ORD-DEP ColExt with the fragmentation rescaling of §4.2.
@@ -112,10 +147,15 @@ def colext_orddep_deduce(table: Table, target_cols: Tuple[str, ...],
             continue
         widths = {c: table.col_by_name[c].width for c in part_cols}
         wsum = sum(widths.values())
-        for col in part_cols:
+        # both F vectors in one batched stats pass per part
+        f_parts = replaced_fraction_batch(
+            table, tuple(part_cols), part_cols).tolist()
+        f_targets = replaced_fraction_batch(
+            table, tuple(target_cols), part_cols).tolist()
+        for i, col in enumerate(part_cols):
             r_col = r_part * widths[col] / max(wsum, 1)
-            f_part = replaced_fraction(table, tuple(part_cols), col)
-            f_target = replaced_fraction(table, tuple(target_cols), col)
+            f_part = f_parts[i]
+            f_target = f_targets[i]
             if f_part <= 1e-9:
                 # part saw no dictionary benefit for this column; assume the
                 # target cannot recover one either

@@ -75,6 +75,34 @@ def adaptive_estimator(freq: Dict[int, int], d: int, r: int, n: int) -> float:
     return float(min(est, float(n)))
 
 
+def ae_ndv(col: np.ndarray, n_full: int) -> float:
+    """Full-table NDV of one column from a sample, via the Adaptive
+    Estimator.  Shared by the scalar and batched GDICT SampleCF paths, so
+    both produce bit-identical estimates."""
+    r = int(col.shape[0])
+    _, counts = np.unique(col, return_counts=True)
+    d = int(counts.size)
+    ks, fk = np.unique(counts, return_counts=True)
+    freq = {int(k): int(v) for k, v in zip(ks, fk)}
+    return adaptive_estimator(freq, d, r, n_full)
+
+
+def gdict_estimated_col_bytes(col: np.ndarray, width: int,
+                              n_full: int) -> float:
+    """Estimated FULL-index GDICT payload bytes of one column.
+
+    GDICT is the known exception to linear CF scaling: a small sample's
+    dictionary is nearly all-distinct, so scaling the sample's compressed
+    fraction overestimates the full dictionary (NDV does not scale with
+    the sample).  Instead, estimate the full-table NDV with the App. B
+    Adaptive Estimator and price the dictionary + pointers at full
+    cardinality directly.
+    """
+    ndv = ae_ndv(col, n_full)
+    ptr = 1 if ndv <= 256 else (2 if ndv <= 65536 else 3)
+    return ndv * width + n_full * ptr
+
+
 def estimate_group_count(sample_keys: np.ndarray, n_rows: int,
                          method: str = "AE") -> float:
     """Estimate #groups of a GROUP-BY over the full table from a sample."""

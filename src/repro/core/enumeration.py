@@ -82,7 +82,6 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
         engine = CostEngine(optimizer.workload, sizes)
     pool = list(pool)
     engine.register(base.indexes)
-    engine.register(pool)
 
     config = base
     evals: Dict[str, TableEval] = {
@@ -90,9 +89,40 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
     cost = sum(e.total for e in evals.values())
     steps: List[str] = []
 
+    # ---- per-step bookkeeping, precomputed once over the pool ----------
+    # engine column ids, per-table candidate index arrays, and an
+    # incrementally-maintained already-present mask replace the former
+    # per-step pool scans (O(pool x config) per greedy step).
     n = len(pool)
+    pool_ids = engine.register(pool)
     pool_sizes = np.array([sizes.size(p) for p in pool]) if n else np.zeros(0)
     pool_tables = sorted({p.table for p in pool})
+
+    def sig(idx: IndexDef) -> Tuple:
+        # the identity _already_present() compares on
+        return (idx.table, idx.cols, idx.predicate, idx.clustered)
+
+    sig_to_ks: Dict[Tuple, List[int]] = {}
+    for k, p in enumerate(pool):
+        sig_to_ks.setdefault(sig(p), []).append(k)
+    sec_ks_by_table = {
+        t: np.array([k for k, p in enumerate(pool)
+                     if p.table == t and not p.clustered], dtype=np.int64)
+        for t in pool_tables}
+    cl_ks_by_table = {
+        t: np.array([k for k, p in enumerate(pool)
+                     if p.table == t and p.clustered], dtype=np.int64)
+        for t in pool_tables}
+    present = np.zeros(n, dtype=bool)
+
+    def recompute_present(cfg: Configuration) -> None:
+        present[:] = False
+        for idx in cfg.indexes:
+            ks = sig_to_ks.get(sig(idx))
+            if ks:
+                present[ks] = True
+
+    recompute_present(config)
 
     for _ in range(max_indexes):
         if not n:
@@ -104,21 +134,18 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
         for t in pool_tables:
             c_id, sec_ids = engine.split(config, t)
             cur = evals[t]
-            sec_ks = [k for k, p in enumerate(pool)
-                      if p.table == t and not p.clustered
-                      and not _already_present(config, p)]
-            if sec_ks:
-                ids = [engine.id_of(pool[k]) for k in sec_ks]
+            all_sec = sec_ks_by_table[t]
+            sec_ks = all_sec[~present[all_sec]]
+            if sec_ks.size:
                 q_tot, upd_delta = engine.score_add_secondary(
-                    t, c_id, cur.q_cost, ids)
+                    t, c_id, cur.q_cost, pool_ids[sec_ks])
                 benefit[sec_ks] = cur.total - (q_tot + cur.u_total + upd_delta)
                 delta_used[sec_ks] = pool_sizes[sec_ks]
-            cl_ks = [k for k, p in enumerate(pool)
-                     if p.table == t and p.clustered
-                     and not _already_present(config, p)]
-            if cl_ks:
-                ids = [engine.id_of(pool[k]) for k in cl_ks]
-                q_tot, upd_c = engine.score_replace_clustered(t, sec_ids, ids)
+            all_cl = cl_ks_by_table[t]
+            cl_ks = all_cl[~present[all_cl]]
+            if cl_ks.size:
+                q_tot, upd_c = engine.score_replace_clustered(
+                    t, sec_ids, pool_ids[cl_ks])
                 benefit[cl_ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
                 old_c = config.clustered(t)
                 old_size = sizes.size(old_c) if old_c is not None else 0.0
@@ -169,6 +196,9 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
         if chosen is None:
             break
         config = chosen[1]
+        # re-derive the present mask from the new config: a clustered
+        # replacement also REMOVES a layout, which can free pool entries
+        recompute_present(config)
         if recovered_choice:
             evals = {t: engine.table_eval(config, t) for t in engine.blocks}
         else:

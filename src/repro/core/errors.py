@@ -17,7 +17,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Iterable
+from typing import Iterable, Tuple
+
+import numpy as np
 
 from .compression import METHODS, ORD_DEP
 
@@ -102,8 +104,79 @@ def compose(rvs: Iterable[ErrorRV]) -> ErrorRV:
     return ErrorRV(e_prod, math.sqrt(var))
 
 
+def goodman_fold(means: np.ndarray, stds: np.ndarray, axis: int = -1
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The raw Goodman accumulators (E-product, V-term, E^2-term) along
+    `axis`, bit-identical to folding `compose` over the factors in axis
+    order: `np.multiply.reduce` is a strict sequential left-fold (numpy
+    pairwise blocking applies to additive reductions only), so every
+    float op matches the scalar loop exactly.  A factor of (1, 0) is the
+    exact multiplicative identity, which is what makes EXACT-padding
+    ragged candidate stacks safe — and the fold can be *continued* with
+    further factors (the planner engine appends the deduction-error term
+    this way) without losing bit-parity, which `compose_batch`'s rounded
+    std cannot do.
+    """
+    means = np.asarray(means, dtype=np.float64)
+    stds = np.asarray(stds, dtype=np.float64)
+    msq = means * means
+    e_prod = np.multiply.reduce(means, axis=axis)
+    v_term = np.multiply.reduce(stds * stds + msq, axis=axis)
+    e2_term = np.multiply.reduce(msq, axis=axis)
+    return e_prod, v_term, e2_term
+
+
+def compose_batch(means: np.ndarray, stds: np.ndarray, axis: int = -1
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """`compose` over stacks: Goodman's formula along `axis`, bit-identical
+    to folding the scalar `compose` over the factors in axis order."""
+    e_prod, v_term, e2_term = goodman_fold(means, stds, axis)
+    var = np.maximum(v_term - e2_term, 0.0)
+    return e_prod, np.sqrt(var)
+
+
 def _phi(x: float) -> float:
     return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+_SQRT2 = math.sqrt(2.0)
+# np.frompyfunc(math.erf) rather than scipy's erf: the batched planner's
+# decisions must be bit-identical to the scalar reference, and only calling
+# the SAME libm erf guarantees that.  The per-element call overhead is paid
+# only on the (mask-compressed) candidate entries the scalar path would
+# score anyway.
+_ERF_VEC = np.frompyfunc(math.erf, 1, 1)
+
+
+def _erf_exact(x: np.ndarray) -> np.ndarray:
+    return _ERF_VEC(x).astype(np.float64)
+
+
+def prob_within_batch(means: np.ndarray, stds: np.ndarray, e: float,
+                      erf=None) -> np.ndarray:
+    """Vectorized `prob_within` over (mean, std) stacks of any shape.
+
+    Same deterministic branch (std <= 1e-12 -> indicator) and the same
+    `_phi` evaluation order as the scalar, so results are bit-identical
+    with the default erf.  `erf` may be swapped for an accelerator-backed
+    implementation (the planner engine's jax scoring backend) at the price
+    of bit-parity.
+    """
+    means = np.asarray(means, dtype=np.float64)
+    stds = np.asarray(stds, dtype=np.float64)
+    lo, hi = 1.0 / (1.0 + e), 1.0 + e
+    out = np.where((lo <= means) & (means <= hi), 1.0, 0.0)
+    big = stds > 1e-12
+    if np.any(big):
+        m = means[big]
+        s = stds[big]
+        erf_fn = _erf_exact if erf is None else erf
+        phi_hi = 0.5 * (1.0 + np.asarray(erf_fn((hi - m) / s / _SQRT2),
+                                         dtype=np.float64))
+        phi_lo = 0.5 * (1.0 + np.asarray(erf_fn((lo - m) / s / _SQRT2),
+                                         dtype=np.float64))
+        out[big] = phi_hi - phi_lo
+    return out
 
 
 @functools.lru_cache(maxsize=65536)

@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import compression, errors
+from . import compression, distinct, errors
 from .relation import IndexDef, Table, rows_per_page, uncompressed_pages
 from .samplecf import SampleManager, SizeEstimate
 
@@ -158,13 +158,16 @@ def batched_sample_cf(table: Table, sample: Table,
     # ---- collect the distinct sizing jobs across all targets ----
     ordind_jobs = set()           # (method, col)
     orddep_jobs = set()           # (method, prefix, rpp_key)
+    gdict_jobs = set()            # col — AE-priced at full cardinality
     for cols, method in specs:
         if method is None:
             continue
         rpp = rpp_key(rows_per_page(sum(widths_of[c] for c in cols)))
         order_dep = compression.METHODS[method].order_dependent
         for j, c in enumerate(cols):
-            if order_dep:
+            if method == "GDICT":
+                gdict_jobs.add(c)
+            elif order_dep:
                 orddep_jobs.add((method, cols[:j + 1], rpp))
             else:
                 ordind_jobs.add((method, c))
@@ -198,6 +201,17 @@ def batched_sample_cf(table: Table, sample: Table,
                 common + n * (1 + w - common) + compression.PAGE_META, cap)
         else:
             kernel_jobs.add(job)
+
+    # ---- GDICT: App. B Adaptive-Estimator pricing (samplecf parity) ----
+    # The sample's dictionary is nearly all-distinct at small f, so GDICT
+    # sizes are not CF-scaled; the shared `gdict_estimated_col_bytes`
+    # estimates full-table NDV per column and prices the full index
+    # directly — bit-identical to the scalar sample_cf GDICT path (the
+    # estimator only depends on the sample's value multiset).
+    gdict_bytes: Dict[str, float] = {
+        c: distinct.gdict_estimated_col_bytes(sample.values[c],
+                                              widths_of[c], table.nrows)
+        for c in gdict_jobs}
 
     perms = _prefix_permutations(
         sample, [p for (_, p, _) in kernel_jobs]) if kernel_jobs else {}
@@ -244,6 +258,14 @@ def batched_sample_cf(table: Table, sample: Table,
         rpp, s, full_bytes, cost = colset_consts(tuple(cols))
         if method is None or n == 0 or s == 0:
             cf = 1.0
+        elif method == "GDICT":
+            # full-cardinality AE pricing (same op order as sample_cf)
+            sc = table.nrows * compression.ROW_OVERHEAD
+            for c in cols:
+                sc = sc + gdict_bytes[c]
+            cf = sc / full_bytes
+            if bias_correct:
+                cf = min(cf / errors.samplecf_bias(method, f), 1.0)
         else:
             order_dep = compression.METHODS[method].order_dependent
             sc = n * compression.ROW_OVERHEAD

@@ -97,6 +97,19 @@ def sampling_cost(table: Table, key: NodeKey, f: float) -> float:
     return float(uncompressed_pages(n, widths))
 
 
+def memoized_sampling_cost(tables: Dict[str, Table], memo: Dict,
+                           key: NodeKey, f: float) -> float:
+    """`sampling_cost` behind a caller-owned (table, cols, f) memo — the
+    ONE pricing helper shared by the scalar planner and the batched
+    engine (which also share the memo dict), so the §5.1 formula cannot
+    drift between the two paths."""
+    ck = (key.table, key.cols, f)
+    c = memo.get(ck)
+    if c is None:
+        c = memo[ck] = sampling_cost(tables[key.table], key, f)
+    return c
+
+
 @functools.lru_cache(maxsize=65536)
 def _colext_deductions(key: NodeKey) -> Tuple[Deduction, ...]:
     """ColExt partitions of `key` (pure in the key, so cached globally)."""
@@ -111,6 +124,15 @@ def _colext_deductions(key: NodeKey) -> Tuple[Deduction, ...]:
                   tuple(NodeKey(key.table, p, key.method) for p in parts),
                   parts)
         for parts in sorted(partitions))
+
+
+@functools.lru_cache(maxsize=262144)
+def _colset_ded(other: NodeKey) -> Deduction:
+    """One shared ColSet Deduction per mate (planner-engine graph build):
+    a ColSet group of g nodes yields O(g^2) (target, mate) pairs but only
+    g distinct deductions.  The scalar reference below keeps constructing
+    its own objects — it is the frozen parity/benchmark baseline."""
+    return Deduction("colset", (other,), (other.cols,))
 
 
 def _colset_deductions(key: NodeKey, mates: Sequence[NodeKey]
@@ -158,27 +180,58 @@ def _deduction_rv(key: NodeKey, d: Deduction,
 
 
 class EstimationPlanner:
-    """Builds the graph and runs the greedy (or optimal) state assignment."""
+    """Builds the graph and runs the greedy (or optimal) state assignment.
+
+    The greedy runs on the batched `planner_engine.PlannerEngine` by default
+    (one pass over a shared deduction graph scores all sampling fractions);
+    `greedy_scalar` is the original per-(target, candidate, f) reference
+    implementation, kept for plan-identical parity checks.  `use_engine`
+    selects the path; `backend` picks the engine's scoring backend
+    ("numpy" — the parity reference — or the optional "jax" mirror of
+    `CostEngine(backend="jax")`).
+    """
 
     def __init__(self, tables: Dict[str, Table],
-                 existing: Optional[Dict[NodeKey, float]] = None):
+                 existing: Optional[Dict[NodeKey, float]] = None,
+                 backend: str = "numpy", use_engine: bool = True):
         self.tables = tables
         self.existing = dict(existing or {})
+        self.backend = backend
+        self.use_engine = use_engine
+        self._engine = None
         self._scost: Dict[Tuple[str, Tuple[str, ...], float], float] = {}
 
+    @property
+    def engine(self):
+        """The batched planner engine (built lazily, shared graph cache).
+        The §5.1 sampling-cost memo is shared with the scalar path."""
+        if self._engine is None:
+            from .planner_engine import PlannerEngine
+            self._engine = PlannerEngine(self.tables, self.existing,
+                                         backend=self.backend,
+                                         scost_memo=self._scost)
+        return self._engine
+
     def _sampling_cost(self, key: NodeKey, f: float) -> float:
-        ck = (key.table, key.cols, f)
-        c = self._scost.get(ck)
-        if c is None:
-            c = self._scost[ck] = sampling_cost(self.tables[key.table],
-                                                key, f)
-        return c
+        return memoized_sampling_cost(self.tables, self._scost, key, f)
 
     # ------------------------------------------------------------------
     # Greedy algorithm (paper §5.2 pseudocode)
     # ------------------------------------------------------------------
     def greedy(self, targets: Sequence[NodeKey], f: float, e: float,
                q: float) -> Plan:
+        """One greedy run at fraction `f` (engine-backed by default)."""
+        if not self.use_engine:
+            return self.greedy_scalar(targets, f, e, q)
+        return self.engine.greedy_batch(targets, e, q, (f,))[0]
+
+    def greedy_scalar(self, targets: Sequence[NodeKey], f: float, e: float,
+                      q: float) -> Plan:
+        """Scalar §5.2 reference: per-(target, candidate) Python scoring.
+
+        The batched engine (`planner_engine.PlannerEngine.greedy_batch`)
+        must stay plan-identical to this — same states, same chosen
+        deductions, same total_cost — for every f."""
         nodes: Dict[NodeKey, Node] = {}
         # (table, column set, method) -> nodes, in insertion order: the
         # ColSet mate lookup without scanning the whole node dict.
@@ -298,16 +351,31 @@ class EstimationPlanner:
 
     def plan(self, targets: Sequence[NodeKey], e: float, q: float,
              f_grid: Sequence[float] = F_GRID) -> Plan:
-        """Outer loop over sampling fractions (§5.2 last paragraph)."""
+        """Outer loop over sampling fractions (§5.2 last paragraph).
+
+        Engine path: one batched pass over the shared graph scores every
+        fraction; only the winning plan is materialized."""
+        if self.use_engine:
+            return self.engine.plan_batch(targets, e, q, tuple(f_grid))
         best: Optional[Plan] = None
         fallback: Optional[Plan] = None
         for f in f_grid:
-            p = self.greedy(targets, f, e, q)
+            p = self.greedy_scalar(targets, f, e, q)
             if p.feasible and (best is None or p.total_cost < best.total_cost):
                 best = p
             if fallback is None or p.total_cost < fallback.total_cost:
                 fallback = p
         return best if best is not None else fallback  # type: ignore
+
+    def plan_scalar(self, targets: Sequence[NodeKey], e: float, q: float,
+                    f_grid: Sequence[float] = F_GRID) -> Plan:
+        """`plan` on the scalar reference greedy (parity/benchmark use)."""
+        saved = self.use_engine
+        try:
+            self.use_engine = False
+            return self.plan(targets, e, q, f_grid)
+        finally:
+            self.use_engine = saved
 
     def plan_all_sampled(self, targets: Sequence[NodeKey], e: float,
                          q: float, f_grid: Sequence[float] = F_GRID) -> Plan:
@@ -322,9 +390,12 @@ class EstimationPlanner:
         can satisfy the constraint — feasibility is then re-checked
         against the caller's q.)
         """
+        if self.use_engine:
+            return self.engine.plan_all_sampled_batch(targets, e, q,
+                                                      tuple(f_grid))
         fallback: Optional[Plan] = None
         for f in f_grid:
-            p = self.greedy(targets, f, e, FORCE_ALL_Q)
+            p = self.greedy_scalar(targets, f, e, FORCE_ALL_Q)
             feasible = all(err.satisfies(p.nodes[t].rv, e, q)
                            for t in targets)
             p = dataclasses.replace(p, feasible=feasible)

@@ -1,0 +1,553 @@
+"""Batched §5.2 deduction planner: the greedy graph search as array code.
+
+The scalar planner (`EstimationPlanner.greedy_scalar`) walks the targets
+narrow-to-wide and, per target, scores every candidate deduction with
+Python-level RV composition and erf calls — then the §5.2 outer loop repeats
+the whole walk for every sampling fraction on F_GRID.  After PRs 1-2 batched
+what-if costing and SampleCF execution, this walk is the advisor's last
+scalar hot path (~0.7s of ~0.8s `estimate_sizes` at 200 statements).
+
+This engine runs the greedy for **all fractions in one pass over a shared
+deduction graph**:
+
+* **Graph build (f-independent, built once).**  The node universe and each
+  target's candidate-deduction set do not depend on f: ColSet mates can only
+  be pre-existing nodes (existing indexes + targets), never nodes
+  materialized mid-walk — a materialized child is strictly narrower than its
+  creator, and the walk is narrow-to-wide, so it can never share a column
+  set with a later target.  The build therefore records, per target in
+  processing order, the candidate `Deduction`s with their children packed
+  into (ncand, K) id/kind arrays (EXACT-padded), plus the deduction-error
+  term of each candidate.
+
+* **Per-(node, f) state arrays.**  Decisions differ across fractions, so
+  node state / error-RV mean / error-RV std live in (nnodes, nf) arrays.
+  One pass over the targets then scores lines 6-9 of the §5.2 pseudocode
+  for a target's whole candidate set, for every f, in a handful of NumPy
+  calls: `errors.goodman_fold` (the sequential-fold core of
+  `errors.compose_batch`, continued with the deduction-error factor) and
+  `errors.prob_within_batch` (vectorized erf over the mask-compressed
+  eligible entries, memoized).
+
+* **(node × f) sampling-cost matrix.**  §5.1 sampling costs are pure in
+  table stats, so the lines 8-9 "enable by sampling unknown children"
+  comparison is an argmin over `extra = Σ cost(unknown child)` arrays.
+
+Parity: decisions reduce to comparisons of floats produced by the same
+IEEE operations in the same order as the scalar reference (see
+`errors.compose_batch` / `errors.prob_within_batch`), so the engine is
+**plan-identical** to `greedy_scalar` — same per-node states, same chosen
+deductions, same `total_cost`, for every f — asserted in
+tests/test_core_estimation.py, tests/test_estimation_engine.py and in
+benchmarks/estimation_scaling.py.
+
+An optional jax.jit scoring backend (`PlannerEngine(backend="jax")`,
+mirroring `CostEngine(backend="jax")` / `estimation_backend="jax"`) swaps
+the erf evaluation for a jitted `jax.scipy.special.erf`; it is gated on
+jax + x64 availability and is NOT bit-parity (jax's erf is a different
+polynomial) — the NumPy backend is the parity reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import errors as err
+from .compression import METHODS, jax_batch_ready
+from .estimation_graph import (Deduction, F_GRID, Node, NodeKey, Plan, State,
+                               _colext_deductions, _colset_ded,
+                               memoized_sampling_cost)
+
+try:  # optional accelerator backend (repro.kernels idiom: gate, don't require)
+    import jax
+    import jax.numpy as jnp
+    from jax.scipy.special import erf as _jax_erf
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - jax is baked into the image
+    jax = None
+    jnp = None
+    _jax_erf = None
+    HAVE_JAX = False
+
+# state codes (match estimation_graph.State member order)
+_NONE, _DEDUCED, _SAMPLED, _EXACT = 0, 1, 2, 3
+_STATE_OF = {_DEDUCED: State.DEDUCED, _SAMPLED: State.SAMPLED,
+             _EXACT: State.EXACT}
+
+
+def _kind_code(method: str) -> int:
+    return 1 if METHODS[method].order_dependent else 0
+
+
+def assert_plan_identical(ref: Plan, got: Plan, label: str = "") -> None:
+    """The engine's parity contract vs `EstimationPlanner.greedy_scalar`:
+    same nodes, states, chosen deductions, error RVs, exact sizes,
+    total_cost and feasibility.  Shared by the parity tests and
+    benchmarks/estimation_scaling.py so the asserted contract cannot
+    drift between suites."""
+    tag = f"{label}: " if label else ""
+    assert got.f == ref.f and got.targets == ref.targets, \
+        tag + "plan identity (f / targets) diverged"
+    assert set(got.nodes) == set(ref.nodes), f"{tag}node sets diverged"
+    for k, na in ref.nodes.items():
+        nb = got.nodes[k]
+        assert na.state is nb.state, f"{tag}state diverged at {k.label()}"
+        assert na.chosen == nb.chosen, \
+            f"{tag}chosen deduction diverged at {k.label()}"
+        assert na.rv == nb.rv, f"{tag}error RV diverged at {k.label()}"
+        assert na.exact_bytes == nb.exact_bytes, \
+            f"{tag}exact size diverged at {k.label()}"
+    assert got.total_cost == ref.total_cost, \
+        f"{tag}total_cost {got.total_cost} != {ref.total_cost}"
+    assert got.feasible == ref.feasible, tag + "feasibility diverged"
+
+
+@dataclasses.dataclass
+class _TargetRec:
+    """One target's candidate-deduction set, packed for array scoring.
+
+    Every candidate child shares the target's compression method (ColSet
+    mates by definition, ColExt parts by construction), so one order-class
+    code covers the whole record.
+    """
+    tid: int
+    key: NodeKey
+    kind: int                # order-class code of target AND all children
+    cands: Tuple[Deduction, ...]
+    child_ids: np.ndarray    # (ncand, K) node ids, PAD-padded
+    nchild: List[int]        # real (unpadded) child count per candidate
+    ded_mean: np.ndarray     # (ncand, 1) deduction-error term (Table 3)
+    ded_msq: np.ndarray      # (ncand, 1) ded mean^2   (Goodman E^2 factor)
+    ded_vterm: np.ndarray    # (ncand, 1) ded std^2 + mean^2 (V factor)
+
+
+@dataclasses.dataclass
+class _Graph:
+    node_keys: List[NodeKey]
+    node_id: Dict[NodeKey, int]
+    exact: List[Tuple[int, NodeKey, float]]
+    recs: List[_TargetRec]
+    scost: Dict[Tuple[float, ...], np.ndarray] = \
+        dataclasses.field(default_factory=dict)   # per-f-grid cost matrix
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Resolved per-(node, f) arrays of one `_run` pass, pre-assembly."""
+    g: _Graph
+    targets: Tuple[NodeKey, ...]
+    f_grid: Tuple[float, ...]
+    state: np.ndarray             # (nnodes+1, nf) state codes
+    mean: np.ndarray              # (nnodes+1, nf) rv mean
+    std: np.ndarray               # (nnodes+1, nf) rv std
+    used: np.ndarray              # (nnodes+1, nf) used-as-child flags
+    chosen: Dict[Tuple[int, int], Deduction]
+    total: List[float]            # per-f accumulated sampling cost
+
+
+class PlannerEngine:
+    """Runs the §5.2 greedy for a whole f grid over one shared graph."""
+
+    def __init__(self, tables: Dict, existing: Optional[Dict] = None,
+                 backend: str = "numpy",
+                 scost_memo: Optional[Dict] = None):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "jax" and not (HAVE_JAX and jax_batch_ready()):
+            backend = "numpy"
+        self.backend = backend
+        self.tables = tables
+        self.existing = dict(existing or {})
+        self._graphs: Dict[Tuple[NodeKey, ...], _Graph] = {}
+        # (table, cols, f) -> §5.1 sampling cost; an owning
+        # EstimationPlanner shares its memo so scalar reference and engine
+        # price from one cache
+        self._scost: Dict[Tuple[str, Tuple[str, ...], float], float] = \
+            scost_memo if scost_memo is not None else {}
+        self._pcache: Dict[Tuple[float, float, float], float] = {}
+        self.graph_builds = 0   # distinct target sets built
+        self.batch_runs = 0     # greedy_batch invocations
+
+    # ------------------------------------------------------------------
+    # Graph construction (f-independent; cached per target tuple)
+    # ------------------------------------------------------------------
+    def _build_graph(self, targets: Sequence[NodeKey]) -> _Graph:
+        node_keys: List[NodeKey] = []
+        node_id: Dict[NodeKey, int] = {}
+        by_set: Dict[Tuple[str, frozenset, str], List[NodeKey]] = {}
+
+        def add(k: NodeKey) -> int:
+            nid = node_id.get(k)
+            if nid is None:
+                nid = node_id[k] = len(node_keys)
+                node_keys.append(k)
+                by_set.setdefault((k.table, frozenset(k.cols), k.method),
+                                  []).append(k)
+            return nid
+
+        exact = [(add(k), k, size) for k, size in self.existing.items()]
+        for t in targets:
+            add(t)
+
+        # materialize candidates in the scalar walk's order; children are
+        # always strictly narrower than their creator, so later targets'
+        # ColSet-mate lists are unaffected by what gets created here
+        raw: List[Tuple[int, NodeKey, Tuple[Deduction, ...]]] = []
+        for t in sorted(targets, key=lambda k: (len(k.cols), k.cols)):
+            mates = by_set.get((t.table, frozenset(t.cols), t.method), ())
+            if METHODS[t.method].order_dependent:
+                colset: List[Deduction] = []
+            else:
+                colset = [_colset_ded(o) for o in mates if o.cols != t.cols]
+            cands = tuple(colset + list(_colext_deductions(t)))
+            for d in cands:
+                for c in d.children:
+                    add(c)
+            raw.append((node_id[t], t, cands))
+
+        n = len(node_keys)
+        pad = n  # virtual EXACT node: neutral under compose, zero cost
+        colset_rv = err.colset_error()
+        recs: List[_TargetRec] = []
+        for tid, t, cands in raw:
+            nc = len(cands)
+            nchild = [len(d.children) for d in cands]
+            # per-target K: most candidates are single-child ColSets, so a
+            # global max (wide ColExt partitions) would pad every target
+            kmax = max(nchild, default=1)
+            child_ids = np.full((nc, kmax), pad, dtype=np.int64)
+            ded_mean = np.empty(nc)
+            ded_std = np.empty(nc)
+            for i, d in enumerate(cands):
+                row = child_ids[i]
+                for j, c in enumerate(d.children):
+                    row[j] = node_id[c]
+                drv = (colset_rv if d.kind == "colset"
+                       else err.colext_error(t.method, nchild[i]))
+                ded_mean[i] = drv.mean
+                ded_std[i] = drv.std
+            dm = ded_mean[:, None]
+            ds = ded_std[:, None]
+            msq = dm * dm
+            recs.append(_TargetRec(tid, t, _kind_code(t.method), cands,
+                                   child_ids, nchild, dm, msq,
+                                   ds * ds + msq))
+        return _Graph(node_keys, node_id, exact, recs)
+
+    def _graph(self, targets: Sequence[NodeKey]) -> _Graph:
+        key = tuple(targets)
+        g = self._graphs.get(key)
+        if g is None:
+            g = self._graphs[key] = self._build_graph(targets)
+            self.graph_builds += 1
+        return g
+
+    def _sampling_cost(self, key: NodeKey, f: float) -> float:
+        return memoized_sampling_cost(self.tables, self._scost, key, f)
+
+    # ------------------------------------------------------------------
+    # Scoring backend (vectorized erf)
+    # ------------------------------------------------------------------
+    def _erf(self, x: np.ndarray) -> np.ndarray:
+        """jax backend: jitted erf, padded to pow2 lengths to bound the
+        number of compiled shapes.  Not bit-parity with math.erf."""
+        n = x.shape[0]
+        if n == 0:
+            return x
+        m = 1 << max(int(n - 1).bit_length(), 0)
+        xp = np.zeros(m)
+        xp[:n] = x
+        return np.asarray(_jax_erf(jnp.asarray(xp)), dtype=np.float64)[:n]
+
+    def _prob(self, means: np.ndarray, stds: np.ndarray,
+              e: float) -> np.ndarray:
+        if self.backend == "jax":
+            return err.prob_within_batch(means, stds, e, erf=self._erf)
+        return err.prob_within_batch(means, stds, e)
+
+    def _prob_cached(self, means: np.ndarray, stds: np.ndarray,
+                     e: float) -> np.ndarray:
+        """`_prob` behind a (e, mean, std) memo — the engine's analogue of
+        the scalar path's `lru_cache` on `prob_within`: composed RVs recur
+        heavily across candidates, targets, fractions and repeated runs.
+        Cache values are exactly the batch-computed floats, so parity is
+        unaffected.  Large requests are deduplicated first (packing the
+        exact float pair into a complex for one `np.unique`): a ColSet
+        group's candidates mostly share one composed RV."""
+        pc = self._pcache
+        if means.size > 64:
+            u, inv = np.unique(means + stds * 1j, return_inverse=True)
+            um = u.real
+            us = u.imag
+        else:
+            inv = None
+            um, us = means, stds
+        ml = um.tolist()
+        sl = us.tolist()
+        out = [0.0] * len(ml)
+        miss: List[int] = []
+        for i, a in enumerate(ml):
+            v = pc.get((e, a, sl[i]))
+            if v is None:
+                miss.append(i)
+            else:
+                out[i] = v
+        if miss:
+            got = self._prob(np.array([ml[i] for i in miss]),
+                             np.array([sl[i] for i in miss]), e).tolist()
+            for i, v in zip(miss, got):
+                out[i] = v
+                pc[(e, ml[i], sl[i])] = v
+        res = np.array(out)
+        return res[inv] if inv is not None else res
+
+    # ------------------------------------------------------------------
+    # The batched greedy (paper §5.2, all fractions at once)
+    # ------------------------------------------------------------------
+    def _scost_matrix(self, g: _Graph, f_grid: Tuple[float, ...]
+                      ) -> np.ndarray:
+        """(node x f) §5.1 sampling-cost matrix (pure in table stats)."""
+        got = g.scost.get(f_grid)
+        if got is None:
+            n = len(g.node_keys)
+            got = np.zeros((n + 1, len(f_grid)))  # pad row: zero cost
+            for nid, k in enumerate(g.node_keys):
+                for fi, f in enumerate(f_grid):
+                    got[nid, fi] = self._sampling_cost(k, f)
+            g.scost[f_grid] = got
+        return got
+
+    def greedy_batch(self, targets: Sequence[NodeKey], e: float, q: float,
+                     f_grid: Sequence[float] = F_GRID) -> List[Plan]:
+        """One `Plan` per fraction in `f_grid`, plan-identical to running
+        `EstimationPlanner.greedy_scalar(targets, f, e, q)` per fraction."""
+        st = self._run(targets, e, q, f_grid)
+        feas = self._feasible_vec(st, e, q)
+        return [self._assemble_one(st, fi, bool(feas[fi]))
+                for fi in range(len(st.f_grid))]
+
+    def plan_batch(self, targets: Sequence[NodeKey], e: float, q: float,
+                   f_grid: Sequence[float] = F_GRID) -> Plan:
+        """§5.2 outer loop: cheapest feasible plan over the f grid (else
+        the cheapest overall), materializing only the winner."""
+        st = self._run(targets, e, q, f_grid)
+        feas = self._feasible_vec(st, e, q)
+        best_fi: Optional[int] = None
+        fb_fi = 0
+        for fi in range(len(st.f_grid)):
+            if feas[fi] and (best_fi is None
+                             or st.total[fi] < st.total[best_fi]):
+                best_fi = fi
+            if st.total[fi] < st.total[fb_fi]:
+                fb_fi = fi
+        fi = best_fi if best_fi is not None else fb_fi
+        return self._assemble_one(st, fi, bool(feas[fi]))
+
+    def plan_all_sampled_batch(self, targets: Sequence[NodeKey], e: float,
+                               q: float, f_grid: Sequence[float] = F_GRID
+                               ) -> Plan:
+        """The "All" baseline: greedy under FORCE_ALL_Q (every deduction
+        fails, so everything samples), feasibility re-judged against the
+        caller's q; first feasible fraction wins, else the cheapest."""
+        from .estimation_graph import FORCE_ALL_Q
+        st = self._run(targets, e, FORCE_ALL_Q, f_grid)
+        feas = self._feasible_vec(st, e, q)
+        fb_fi = 0
+        for fi in range(len(st.f_grid)):
+            if feas[fi]:
+                return self._assemble_one(st, fi, True)
+            if st.total[fi] < st.total[fb_fi]:
+                fb_fi = fi
+        return self._assemble_one(st, fb_fi, False)
+
+    def _run(self, targets: Sequence[NodeKey], e: float, q: float,
+             f_grid: Sequence[float]) -> "_RunState":
+        """One pass over the targets, scoring lines 6-9 of the §5.2
+        pseudocode for the whole candidate set, for every f, at once.
+
+        One composed-RV evaluation serves BOTH phases: with unknown
+        children substituted by their hypothetical SampleCF error, the
+        trial RV of lines 8-9 equals the actual deduction RV of lines 6-7
+        on fully-known rows (the where() substitutes nothing there), so
+        the two phases share one `compose`-equivalent and one
+        mask-compressed probability call.
+        """
+        self.batch_runs += 1
+        f_grid = tuple(f_grid)
+        g = self._graph(targets)
+        nf = len(f_grid)
+        n = len(g.node_keys)
+        pad = n
+
+        # packed per-(node, f) state: [state code, rv mean, rv std, cost]
+        # — one fancy-index gathers everything a candidate row needs
+        buf = np.zeros((n + 1, 4, nf))
+        buf[:, 1, :] = 1.0                        # default rv = EXACT
+        buf[pad, 0, :] = _EXACT
+        for nid, _, _ in g.exact:
+            buf[nid, 0, :] = _EXACT
+        buf[:, 3, :] = self._scost_matrix(g, f_grid)
+        state = buf[:, 0, :]
+        scost = buf[:, 3, :]
+
+        # SampleCF error RVs per (order class, f) — Table 2 fits
+        samp = np.empty((2, 2, nf))               # [kind, mean/std, f]
+        rep = {_kind_code(m): m for m in METHODS}
+        for kc, method in rep.items():
+            for fi, f in enumerate(f_grid):
+                rv = err.samplecf_error(method, f)
+                samp[kc, 0, fi] = rv.mean
+                samp[kc, 1, fi] = rv.std
+        samp_mean = samp[:, 0, :]
+        samp_std = samp[:, 1, :]
+
+        total = [0.0] * nf
+        used = np.zeros((n + 1, nf), dtype=bool)
+        chosen: Dict[Tuple[int, int], Deduction] = {}
+        false_f = np.zeros(nf, dtype=bool)
+
+        for rec in g.recs:
+            tid = rec.tid
+            act = state[tid] == _NONE              # (nf,)
+            if not act.any():
+                continue
+            nc = len(rec.cands)
+            kc = rec.kind
+            has6 = has9 = false_f
+            if nc:
+                ch = buf[rec.child_ids]            # (nc, K, 4, nf)
+                known = ch[:, :, 0, :] != _NONE
+                allk = known.all(axis=1)           # (nc, nf)
+                any_unknown = not allk.all()
+                m_t = ch[:, :, 1, :]
+                s_t = ch[:, :, 2, :]
+                if any_unknown:
+                    # children RVs, unknown ones hypothetically sampled
+                    # (all children share the target's method, hence one
+                    # Table 2 error fit per record)
+                    m_t = np.where(known, m_t, samp_mean[kc])
+                    s_t = np.where(known, s_t, samp_std[kc])
+
+                # Goodman fold over the children axis, continued with the
+                # deduction-error factor — bit-identical to the scalar
+                # compose (children in order, deduction term last)
+                cm, v, e2 = err.goodman_fold(m_t, s_t, axis=1)
+                cm = cm * rec.ded_mean
+                v = v * rec.ded_vterm
+                e2 = e2 * rec.ded_msq
+                cs = np.sqrt(np.maximum(v - e2, 0.0))
+
+                mask67 = allk & act
+                if any_unknown:
+                    # lines 8-9 precondition: summed sampling cost of the
+                    # unknown children.  add.reduce over a non-contiguous
+                    # axis is a sequential fold (numpy pairwise blocking
+                    # needs the reduction axis contiguous), and the known
+                    # children's exact 0.0 terms leave every partial sum
+                    # unchanged — so this matches the scalar child-order
+                    # sum bit-for-bit (asserted in the parity tests).
+                    extra = np.add.reduce(
+                        np.where(known, 0.0, ch[:, :, 3, :]), axis=1)
+                    my_cost = scost[tid]           # (nf,)
+                    pre9 = ~allk & (extra < my_cost) & act
+                    mask_p = mask67 | pre9
+                else:
+                    pre9 = None
+                    mask_p = mask67
+
+                # one probability pass over both phases' eligible entries
+                p = np.zeros((nc, nf))
+                ii = mask_p.nonzero()
+                if ii[0].size:
+                    p[ii] = self._prob_cached(cm[ii], cs[ii], e)
+                sat = p >= q
+
+                # ---- lines 6-7: an enabled deduction satisfying (e, q) --
+                elig = mask67 & sat
+                has6 = elig.any(axis=0)
+                if has6.any():
+                    w6 = np.argmax(np.where(elig, p, -1.0), axis=0)
+                    for fi in np.nonzero(has6)[0]:
+                        w = int(w6[fi])
+                        buf[tid, :3, fi] = _DEDUCED, cm[w, fi], cs[w, fi]
+                        chosen[(tid, fi)] = rec.cands[w]
+                        used[rec.child_ids[w], fi] = True
+
+                # ---- lines 8-9: enable one by sampling unknown children -
+                has9 = false_f
+                if pre9 is not None:
+                    ok9 = pre9 & sat & ~has6
+                    has9 = ok9.any(axis=0)
+                if has9.any():
+                    w9 = np.argmin(np.where(ok9, extra, np.inf), axis=0)
+                    for fi in np.nonzero(has9)[0]:
+                        w = int(w9[fi])
+                        for cid in rec.child_ids[w, :rec.nchild[w]]:
+                            if buf[cid, 0, fi] == _NONE:
+                                buf[cid, :3, fi] = (_SAMPLED,
+                                                    samp_mean[kc, fi],
+                                                    samp_std[kc, fi])
+                                total[fi] += float(scost[cid, fi])
+                        buf[tid, :3, fi] = _DEDUCED, cm[w, fi], cs[w, fi]
+                        chosen[(tid, fi)] = rec.cands[w]
+                        used[rec.child_ids[w], fi] = True
+
+            # ---- lines 10-11: fall back to SampleCF on this target ------
+            rest = np.nonzero(act & ~has6 & ~has9)[0]
+            if rest.size:
+                buf[tid, 0, rest] = _SAMPLED
+                buf[tid, 1, rest] = samp_mean[kc, rest]
+                buf[tid, 2, rest] = samp_std[kc, rest]
+                for fi in rest:
+                    total[fi] += float(scost[tid, fi])
+
+        return _RunState(g=g, targets=tuple(targets), f_grid=f_grid,
+                         state=state, mean=buf[:, 1, :], std=buf[:, 2, :],
+                         used=used, chosen=chosen, total=total)
+
+    # ------------------------------------------------------------------
+    def _feasible_vec(self, st: "_RunState", e: float,
+                      q: float) -> np.ndarray:
+        """Per-f feasibility: every target's final RV satisfies (e, q).
+        Probability values are the same memoized batch floats the scalar
+        `err.satisfies` would produce, so flags agree bit-for-bit."""
+        tids = [st.g.node_id[t] for t in st.targets]
+        m = st.mean[tids]                          # (ntargets, nf)
+        s = st.std[tids]
+        p = self._prob_cached(m.ravel(), s.ravel(), e).reshape(m.shape)
+        return (p >= q).all(axis=0)
+
+    def _assemble_one(self, st: "_RunState", fi: int,
+                      feasible: bool) -> Plan:
+        """Materialize fraction `fi`'s `Plan` (scalar lines 13-14 cleanup:
+        keep only targets, used children, and EXACT existing nodes)."""
+        g = st.g
+        f = st.f_grid[fi]
+        n = len(g.node_keys)
+        is_target = np.zeros(n, dtype=bool)
+        is_target[[g.node_id[t] for t in st.targets]] = True
+        # pull the f column out as plain Python scalars once — per-node
+        # numpy scalar indexing would dominate the assembly otherwise
+        st_col = st.state[:, fi].tolist()
+        m_col = st.mean[:, fi].tolist()
+        s_col = st.std[:, fi].tolist()
+        nodes: Dict[NodeKey, Node] = {}
+        for _, k, size in g.exact:
+            nodes[k] = Node(k, State.EXACT, rv=err.EXACT, exact_bytes=size)
+        for nid in np.nonzero(st.used[:n, fi] | is_target)[0].tolist():
+            k = g.node_keys[nid]
+            if k in nodes:
+                continue
+            code = int(st_col[nid])
+            assert code != _NONE, f"unresolved plan node {k.label()}"
+            node = Node(k, _STATE_OF[code])
+            if code == _SAMPLED:
+                node.rv = err.samplecf_error(k.method, f)
+            else:  # DEDUCED
+                node.chosen = st.chosen[(nid, fi)]
+                node.rv = err.ErrorRV(m_col[nid], s_col[nid])
+            nodes[k] = node
+        return Plan(f=f, nodes=nodes, targets=st.targets,
+                    total_cost=st.total[fi], feasible=feasible)

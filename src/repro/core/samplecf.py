@@ -86,23 +86,36 @@ def sample_cf(manager: SampleManager, idx: IndexDef, f: float,
     data = build_index_data(sample, idx)
     n_sample = data.shape[0]
     s = compression.uncompressed_payload_bytes(n_sample, widths)
+    # full index cardinality the estimate is scaled to
+    if idx.predicate is not None:
+        full_rows = int(idx.predicate.mask(table).sum())
+    else:
+        full_rows = table.nrows
+    full_bytes = compression.uncompressed_payload_bytes(full_rows, widths)
     if idx.compression is None:
         cf = 1.0
     elif n_sample == 0 or s == 0:
         cf = 1.0
+    elif idx.compression == "GDICT":
+        # NDV does not scale with the sample (the dictionary of a small
+        # sample is nearly all-distinct), so linear CF scaling
+        # over-estimates GDICT; price the full index directly with the
+        # App. B Adaptive Estimator instead.
+        from . import distinct
+        sc = full_rows * compression.ROW_OVERHEAD
+        for j, w in enumerate(widths):
+            sc = sc + distinct.gdict_estimated_col_bytes(
+                data[:, j], w, full_rows)
+        cf = sc / full_bytes
+        if bias_correct:
+            from . import errors
+            cf = min(cf / errors.samplecf_bias(idx.compression, f), 1.0)
     else:
         sc = compression.compressed_payload_bytes(idx.compression, data, widths)
         cf = sc / s
         if bias_correct:
             from . import errors
             cf = min(cf / errors.samplecf_bias(idx.compression, f), 1.0)
-
-    # scale to the full index cardinality
-    if idx.predicate is not None:
-        full_rows = int(idx.predicate.mask(table).sum())
-    else:
-        full_rows = table.nrows
-    full_bytes = compression.uncompressed_payload_bytes(full_rows, widths)
     cost = uncompressed_pages(n_sample, widths)
     return SizeEstimate(index=idx, est_bytes=cf * full_bytes,
                         method="samplecf", cost_pages=float(cost), cf=cf)

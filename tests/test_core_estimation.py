@@ -11,6 +11,8 @@ from repro.core import (EstimationPlanner, IndexDef, NodeKey, SampleManager,
                         State, make_tpch_like)
 from repro.core import distinct as DV
 from repro.core import errors as E
+from repro.core.estimation_graph import F_GRID, FORCE_ALL_Q
+from repro.core.planner_engine import assert_plan_identical
 from repro.core.samplecf import full_index_sizes
 from repro.core.synopses import MVDef, SynopsisManager
 
@@ -50,8 +52,117 @@ class TestErrors:
         p = E.prob_within(rv, 0.5)
         assert 0.0 <= p <= 1.0
 
+    rv_strategy = st.tuples(st.floats(0.2, 2.5), st.floats(0.0, 0.6))
+
+    @given(st.lists(rv_strategy, min_size=0, max_size=7))
+    @settings(max_examples=60, deadline=None)
+    def test_property_compose_batch_bit_identical(self, pairs):
+        """compose_batch == scalar compose, bit-for-bit, on 1-D stacks."""
+        rvs = [E.ErrorRV(m, s) for m, s in pairs]
+        want = E.compose(rvs)
+        means = np.array([m for m, _ in pairs])
+        stds = np.array([s for _, s in pairs])
+        gm, gs = E.compose_batch(means, stds)
+        assert float(gm) == want.mean and float(gs) == want.std
+
+    @given(st.lists(st.lists(rv_strategy, min_size=3, max_size=3),
+                    min_size=1, max_size=5))
+    @settings(max_examples=40, deadline=None)
+    def test_property_compose_batch_rows(self, rows):
+        """Row-stacked compose_batch == per-row scalar compose; EXACT
+        padding is a bitwise no-op."""
+        means = np.array([[m for m, _ in row] for row in rows])
+        stds = np.array([[s for _, s in row] for row in rows])
+        pad_m = np.concatenate([means, np.ones((len(rows), 2))], axis=1)
+        pad_s = np.concatenate([stds, np.zeros((len(rows), 2))], axis=1)
+        gm, gs = E.compose_batch(means, stds, axis=1)
+        pm, ps = E.compose_batch(pad_m, pad_s, axis=1)
+        assert np.array_equal(gm, pm) and np.array_equal(gs, ps)
+        for i, row in enumerate(rows):
+            want = E.compose([E.ErrorRV(m, s) for m, s in row])
+            assert gm[i] == want.mean and gs[i] == want.std
+
+    @given(st.floats(0.2, 2.5),
+           st.one_of(st.just(0.0), st.just(1e-13), st.floats(1e-6, 0.6)),
+           st.floats(0.01, 2.0))
+    @settings(max_examples=80, deadline=None)
+    def test_property_prob_within_batch_bit_identical(self, mean, std, e):
+        """prob_within_batch == scalar prob_within, bit-for-bit, through
+        both the deterministic (std ~ 0) and the normal-CDF branch."""
+        want = E.prob_within(E.ErrorRV(mean, std), e)
+        got = E.prob_within_batch(np.array([mean]), np.array([std]), e)
+        assert float(got[0]) == want
+
+    @given(st.lists(rv_strategy, min_size=2, max_size=6))
+    @settings(max_examples=40, deadline=None)
+    def test_property_goodman_fold_continuation(self, pairs):
+        """Continuing the raw fold with one more factor equals composing
+        the full list — the planner engine appends the deduction term
+        this way."""
+        *head, (lm, ls) = pairs
+        means = np.array([m for m, _ in head])
+        stds = np.array([s for _, s in head])
+        ep, v, e2 = E.goodman_fold(means, stds)
+        mm = lm * lm
+        ep = ep * lm
+        v = v * (ls * ls + mm)
+        e2 = e2 * mm
+        want = E.compose([E.ErrorRV(m, s) for m, s in pairs])
+        assert float(ep) == want.mean
+        assert float(np.sqrt(np.maximum(v - e2, 0.0))) == want.std
+
 
 class TestPlanner:
+    # (table, cols) pool for randomized target sets: permutations share a
+    # column set (ColSet deductions), wider keys extend narrower (ColExt)
+    PLAN_POOL = (
+        ("lineitem", ("l_shipdate",)),
+        ("lineitem", ("l_quantity",)),
+        ("lineitem", ("l_extendedprice",)),
+        ("lineitem", ("l_shipdate", "l_quantity")),
+        ("lineitem", ("l_quantity", "l_shipdate")),
+        ("lineitem", ("l_shipdate", "l_extendedprice")),
+        ("lineitem", ("l_shipdate", "l_extendedprice", "l_quantity")),
+        ("lineitem", ("l_extendedprice", "l_shipdate", "l_quantity")),
+        ("orders", ("o_orderdate",)),
+        ("orders", ("o_orderdate", "o_totalprice")),
+        ("orders", ("o_totalprice", "o_orderdate")),
+    )
+
+    @given(st.sampled_from(["NS", "LDICT"]),
+           st.lists(st.integers(0, 10), min_size=1, max_size=6,
+                    unique=True),
+           st.sampled_from(F_GRID),
+           st.floats(0.05, 1.5),
+           st.sampled_from([0.5, 0.8, 0.9, 0.99, FORCE_ALL_Q]),
+           st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_property_batched_planner_plan_identical(
+            self, method, picks, f, e, q, with_existing):
+        """Batched engine == greedy_scalar, plan-identically, over
+        randomized target sets, fractions, (e, q) — including the
+        FORCE_ALL_Q all-sampled forcing and EXACT existing-index nodes."""
+        schema = make_tpch_like(scale=0.2, z=0, seed=0)
+        targets = [NodeKey(t, c, method)
+                   for t, c in (self.PLAN_POOL[i] for i in picks)]
+        existing = {NodeKey("lineitem", ("l_shipdate",), method): 4321.0} \
+            if with_existing else None
+        planner = EstimationPlanner(schema.tables, existing=existing)
+        ref = planner.greedy_scalar(targets, f, e, q)
+        got = planner.engine.greedy_batch(targets, e, q, (f,))[0]
+        assert_plan_identical(ref, got)
+
+    @given(st.sampled_from(["NS", "LDICT"]), st.floats(0.1, 1.2),
+           st.floats(0.5, 0.99))
+    @settings(max_examples=10, deadline=None)
+    def test_property_plan_engine_equals_scalar_grid(self, method, e, q):
+        """`plan` (engine) == `plan_scalar` (reference grid loop)."""
+        schema = make_tpch_like(scale=0.2, z=0, seed=0)
+        planner = EstimationPlanner(schema.tables)
+        targets = self.make_targets(method)
+        assert_plan_identical(planner.plan_scalar(targets, e, q),
+                              planner.plan(targets, e, q))
+
     def make_targets(self, method="NS"):
         return [
             NodeKey("lineitem", ("l_shipdate",), method),
