@@ -6,6 +6,7 @@
 # join synopses / Adaptive-Estimator MV cardinalities (App. B).
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
+from .session import AdvisorSession
 from .cost_engine import CostEngine
 from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
@@ -15,11 +16,11 @@ from .samplecf import SampleManager, sample_cf
 from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer, \
     base_configuration, storage_used
-from .workload import BulkInsert, Query, Workload, make_scaled_workload, \
-    make_tpch_like, make_tpch_workload
+from .workload import BulkInsert, Query, Workload, WorkloadDelta, \
+    make_scaled_workload, make_tpch_like, make_tpch_workload
 
 __all__ = [
-    "AdvisorOptions", "DesignAdvisor", "Recommendation",
+    "AdvisorOptions", "DesignAdvisor", "Recommendation", "AdvisorSession",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
     "EstimationEngine", "batched_sample_cf",
     "EstimationPlanner", "NodeKey", "Plan", "State", "PlannerEngine",
@@ -28,6 +29,6 @@ __all__ = [
     "ForeignKey", "MVDef", "Schema", "SynopsisManager",
     "Configuration", "SizeProvider", "WhatIfOptimizer",
     "base_configuration", "storage_used",
-    "BulkInsert", "Query", "Workload", "make_scaled_workload",
-    "make_tpch_like", "make_tpch_workload",
+    "BulkInsert", "Query", "Workload", "WorkloadDelta",
+    "make_scaled_workload", "make_tpch_like", "make_tpch_workload",
 ]

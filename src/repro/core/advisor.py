@@ -62,6 +62,43 @@ class AdvisorOptions:
         return AdvisorOptions()
 
 
+def select_candidates(costed: Sequence[cand.Candidate],
+                      options: AdvisorOptions) -> List[cand.Candidate]:
+    """§6.1 per-query selection switch (skyline or top-k) — one shared
+    implementation for the one-shot advisor and the online session."""
+    if options.candidate_mode == "skyline":
+        sel = cand.select_skyline(costed)
+        return cand.skyline_representatives(sel, options.max_skyline_points)
+    return cand.select_topk(costed, options.topk)
+
+
+def pool_with_merged(pool: Dict[Tuple, IndexDef],
+                     merged_all: Sequence[IndexDef]
+                     ) -> Dict[Tuple, IndexDef]:
+    """Append merged candidates to the selection pool (Figure 1: Merging
+    sits between candidate selection and enumeration) — shared so the
+    one-shot advisor and the online session cannot drift."""
+    for idx in merged_all:
+        pool.setdefault(idx.key, idx)
+    return pool
+
+
+def enumerate_pool(optimizer, sizes, options: AdvisorOptions,
+                   pool: Dict[Tuple, IndexDef], base: Configuration,
+                   budget_bytes: float,
+                   engine: Optional[CostEngine]) -> EnumerationResult:
+    """§6.2 greedy enumeration dispatch — one shared implementation for
+    the one-shot advisor and the online session (their bit-exact parity
+    contract depends on running the same code here)."""
+    if engine is not None:
+        return greedy_enumerate(optimizer, sizes, list(pool.values()),
+                                base, budget_bytes,
+                                variant=options.enumeration, engine=engine)
+    return greedy_enumerate_scalar(optimizer, sizes, list(pool.values()),
+                                   base, budget_bytes,
+                                   variant=options.enumeration)
+
+
 @dataclasses.dataclass
 class Recommendation:
     config: Configuration
@@ -125,7 +162,13 @@ class DesignAdvisor:
         merged = cand.merged_candidates(per_query)
         for idx in merged:
             seen.setdefault(idx.key, idx)
-        raw = list(seen.values())
+        # canonical union order (raw candidates are predicate-free, so
+        # (table, cols, clustered) is unique): a first-seen order would
+        # reshuffle whenever an early statement leaves the workload,
+        # churning the estimation targets' deduction groups for nothing —
+        # sorted order is stable under workload deltas
+        raw = sorted(seen.values(),
+                     key=lambda i: (i.table, i.cols, i.clustered))
         if not self.opt.consider_compression:
             return per_query, merged, raw
         per_query_exp = {name: cand.expand_with_compression(c,
@@ -163,9 +206,12 @@ class DesignAdvisor:
         if not targets:
             return 0.0, None, 0, 0
 
+        # one-shot planner: skip the cross-run replay bookkeeping the
+        # persistent AdvisorSession planner records
         planner = EstimationPlanner(self.schema.tables,
                                     backend=self.opt.planner_backend,
-                                    use_engine=self.opt.use_batched_planner)
+                                    use_engine=self.opt.use_batched_planner,
+                                    record=False)
         if self.opt.use_deduction:
             plan = planner.plan(targets, self.opt.e, self.opt.q)
         else:
@@ -187,23 +233,27 @@ class DesignAdvisor:
         return plan.total_cost, plan, plan.n_sampled(), plan.n_deduced()
 
     # ------------------------------------------------------------------
-    def recommend(self, budget_bytes: float) -> Recommendation:
-        t0 = time.perf_counter()
-        base = base_configuration(self.schema)
+    # Pipeline stages.  `recommend` composes them; the online
+    # `repro.core.session.AdvisorSession` invokes them selectively with
+    # its incremental caches.  This one-shot composition is the frozen
+    # parity reference for the session.
+    # ------------------------------------------------------------------
+    def build_engine(self) -> Optional[CostEngine]:
+        """Stage: the batched what-if engine over the current sizes (None
+        on the scalar path).  Built after size estimation so every
+        compressed candidate is scored with its estimated size."""
+        if not self.opt.use_engine:
+            return None
+        return CostEngine(self.workload, self.sizes,
+                          backend=self.opt.engine_backend)
 
-        per_query_exp, merged_all, all_cands = self._candidate_universe()
-        est_cost, plan, n_s, n_d = self.estimate_sizes(all_cands)
-
-        # The batched engine is built after size estimation so every
-        # compressed candidate is scored with its estimated size.
-        engine = None
-        if self.opt.use_engine:
-            engine = CostEngine(self.workload, self.sizes,
-                                backend=self.opt.engine_backend)
-        base_cost = (engine.config_cost(base) if engine is not None
-                     else self.optimizer.workload_cost(base))
-
-        # per-query candidate selection
+    def select_pool(self, per_query_exp: Dict[str, List[IndexDef]],
+                    merged_all: Sequence[IndexDef], base: Configuration,
+                    engine: Optional[CostEngine]
+                    ) -> Tuple[Dict[Tuple, IndexDef], int]:
+        """Stage: per-query candidate costing + §6.1 selection; merged
+        candidates enter the pool directly (Figure 1: Merging sits
+        between candidate selection and enumeration)."""
         pool: Dict[Tuple, IndexDef] = {}
         n_cand = 0
         for q in self.workload.queries():
@@ -211,30 +261,30 @@ class DesignAdvisor:
                                           self.optimizer, self.sizes,
                                           engine=engine)
             n_cand += len(costed)
-            if self.opt.candidate_mode == "skyline":
-                sel = cand.select_skyline(costed)
-                sel = cand.skyline_representatives(
-                    sel, self.opt.max_skyline_points)
-            else:
-                sel = cand.select_topk(costed, self.opt.topk)
-            for c in sel:
+            for c in select_candidates(costed, self.opt):
                 pool.setdefault(c.index.key, c.index)
+        return pool_with_merged(pool, merged_all), n_cand
 
-        # merged candidates enter the pool directly (Figure 1: Merging sits
-        # between candidate selection and enumeration)
-        for idx in merged_all:
-            pool.setdefault(idx.key, idx)
+    def enumerate_pool(self, pool: Dict[Tuple, IndexDef],
+                       base: Configuration, budget_bytes: float,
+                       engine: Optional[CostEngine]) -> EnumerationResult:
+        """Stage: §6.2 greedy enumeration over the selected pool."""
+        return enumerate_pool(self.optimizer, self.sizes, self.opt, pool,
+                              base, budget_bytes, engine)
 
-        if engine is not None:
-            res = greedy_enumerate(self.optimizer, self.sizes,
-                                   list(pool.values()), base, budget_bytes,
-                                   variant=self.opt.enumeration,
-                                   engine=engine)
-        else:
-            res = greedy_enumerate_scalar(self.optimizer, self.sizes,
-                                          list(pool.values()), base,
-                                          budget_bytes,
-                                          variant=self.opt.enumeration)
+    def recommend(self, budget_bytes: float) -> Recommendation:
+        t0 = time.perf_counter()
+        base = base_configuration(self.schema)
+
+        per_query_exp, merged_all, all_cands = self._candidate_universe()
+        est_cost, plan, n_s, n_d = self.estimate_sizes(all_cands)
+
+        engine = self.build_engine()
+        base_cost = (engine.config_cost(base) if engine is not None
+                     else self.optimizer.workload_cost(base))
+        pool, n_cand = self.select_pool(per_query_exp, merged_all, base,
+                                        engine)
+        res = self.enumerate_pool(pool, base, budget_bytes, engine)
         return Recommendation(
             config=res.config, base=base, base_cost=base_cost, cost=res.cost,
             used_bytes=res.used_bytes, budget_bytes=budget_bytes,
@@ -245,35 +295,67 @@ class DesignAdvisor:
 
 
 def staged_recommend(workload: Workload, budget_bytes: float,
-                     methods: Sequence[str] = DEFAULT_ADVISOR_METHODS
+                     methods: Optional[Sequence[str]] = None,
+                     options: Optional[AdvisorOptions] = None
                      ) -> Recommendation:
     """The decoupled strategy of Example 1: select uncompressed indexes
-    first, then compress the chosen ones to reclaim space (repeat once)."""
-    adv = DesignAdvisor(workload, AdvisorOptions.dta())
+    first, then compress the chosen ones to reclaim space (repeat once).
+
+    Honors the caller's `AdvisorOptions`: stage 1 runs DTA (no
+    compression) but inherits the caller's estimation settings and
+    backends, stage 2 plans compressed sizes against the caller's (e, q)
+    rather than a hard-coded (0.5, 0.9), and the stage-2/3 recompression
+    loop is costed through the batched `CostEngine.config_cost` (the
+    scalar `workload_cost` when `use_engine` is off)."""
+    opt = options or AdvisorOptions()
+    if methods is None:
+        methods = opt.methods
+    stage1 = dataclasses.replace(
+        AdvisorOptions.dta(), e=opt.e, q=opt.q,
+        sample_seed=opt.sample_seed, include_clustered=opt.include_clustered,
+        use_engine=opt.use_engine, engine_backend=opt.engine_backend,
+        use_batched_estimation=opt.use_batched_estimation,
+        estimation_backend=opt.estimation_backend,
+        use_batched_planner=opt.use_batched_planner,
+        planner_backend=opt.planner_backend)
+    adv = DesignAdvisor(workload, stage1)
     rec = adv.recommend(budget_bytes)
     # stage 2: compress every selected secondary index with the best method
     sizes, optimizer = adv.sizes, adv.optimizer
     # register sizes for compressed variants of the chosen indexes
     chosen = [i for i in rec.config.indexes if not i.clustered]
     variants = cand.expand_with_compression(chosen, methods)
-    planner = EstimationPlanner(adv.schema.tables)
+    planner = EstimationPlanner(adv.schema.tables,
+                                backend=opt.planner_backend,
+                                use_engine=opt.use_batched_planner,
+                                record=False)
     targets = [NodeKey(i.table, i.cols, i.compression) for i in variants
                if i.compression is not None]
     if targets:
-        plan = planner.plan(targets, 0.5, 0.9)
-        for k, est in planner.execute(plan, adv.samples).items():
+        plan = planner.plan(targets, opt.e, opt.q)
+        ests = (planner.execute(plan, adv.samples)
+                if opt.use_batched_estimation
+                else planner.execute_scalar(plan, adv.samples))
+        for k, est in ests.items():
             sizes.register(IndexDef(k.table, k.cols, k.method), est.est_bytes)
+    # the recompression loop's cost oracle: the batched engine, built
+    # AFTER the compressed sizes are registered so variants score with
+    # their estimated sizes
+    if opt.use_engine:
+        cost_fn = CostEngine(workload, sizes,
+                             backend=opt.engine_backend).config_cost
+    else:
+        cost_fn = optimizer.workload_cost
     config = rec.config
     for idx in chosen:
-        best = (optimizer.workload_cost(config), config)
+        best = (cost_fn(config), config)
         for m in methods:
             cfg2 = config.replace(idx, idx.with_compression(m))
-            c2 = optimizer.workload_cost(cfg2)
+            c2 = cost_fn(cfg2)
             if c2 < best[0]:
                 best = (c2, cfg2)
         config = best[1]
-    # stage 3: with reclaimed space, run plain greedy again on leftovers
+    # stage 3: with reclaimed space, account the recompressed footprint
     used = storage_used(config, rec.base, sizes)
     return dataclasses.replace(
-        rec, config=config, cost=optimizer.workload_cost(config),
-        used_bytes=used)
+        rec, config=config, cost=cost_fn(config), used_bytes=used)

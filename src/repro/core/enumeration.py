@@ -124,32 +124,42 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
 
     recompute_present(config)
 
+    # per-table benefit/delta-used caches: a greedy step only changes ONE
+    # table's configuration, so every other table's scores are reused
+    # verbatim (the recomputed values would be bit-identical)
+    benefit = np.full(n, -np.inf)
+    delta_used = np.zeros(n)
+    stale = set(pool_tables)
+
+    def rescore(t: str) -> None:
+        c_id, sec_ids = engine.split(config, t)
+        cur = evals[t]
+        all_sec = sec_ks_by_table[t]
+        benefit[all_sec] = -np.inf
+        sec_ks = all_sec[~present[all_sec]]
+        if sec_ks.size:
+            q_tot, upd_delta = engine.score_add_secondary(
+                t, c_id, cur.q_cost, pool_ids[sec_ks])
+            benefit[sec_ks] = cur.total - (q_tot + cur.u_total + upd_delta)
+            delta_used[sec_ks] = pool_sizes[sec_ks]
+        all_cl = cl_ks_by_table[t]
+        benefit[all_cl] = -np.inf
+        cl_ks = all_cl[~present[all_cl]]
+        if cl_ks.size:
+            q_tot, upd_c = engine.score_replace_clustered(
+                t, sec_ids, pool_ids[cl_ks])
+            benefit[cl_ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
+            old_c = config.clustered(t)
+            old_size = sizes.size(old_c) if old_c is not None else 0.0
+            delta_used[cl_ks] = pool_sizes[cl_ks] - old_size
+
     for _ in range(max_indexes):
         if not n:
             break
         used = storage_used(config, base, sizes)
-        benefit = np.full(n, -np.inf)
-        delta_used = np.zeros(n)
-
-        for t in pool_tables:
-            c_id, sec_ids = engine.split(config, t)
-            cur = evals[t]
-            all_sec = sec_ks_by_table[t]
-            sec_ks = all_sec[~present[all_sec]]
-            if sec_ks.size:
-                q_tot, upd_delta = engine.score_add_secondary(
-                    t, c_id, cur.q_cost, pool_ids[sec_ks])
-                benefit[sec_ks] = cur.total - (q_tot + cur.u_total + upd_delta)
-                delta_used[sec_ks] = pool_sizes[sec_ks]
-            all_cl = cl_ks_by_table[t]
-            cl_ks = all_cl[~present[all_cl]]
-            if cl_ks.size:
-                q_tot, upd_c = engine.score_replace_clustered(
-                    t, sec_ids, pool_ids[cl_ks])
-                benefit[cl_ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
-                old_c = config.clustered(t)
-                old_size = sizes.size(old_c) if old_c is not None else 0.0
-                delta_used[cl_ks] = pool_sizes[cl_ks] - old_size
+        for t in sorted(stale):
+            rescore(t)
+        stale.clear()
 
         valid = benefit > 1e-9
         if not valid.any():
@@ -201,9 +211,11 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
         recompute_present(config)
         if recovered_choice:
             evals = {t: engine.table_eval(config, t) for t in engine.blocks}
+            stale.update(pool_tables)
         else:
             t = chosen[0].table
             evals[t] = engine.table_eval(config, t)
+            stale.add(t)
         new_cost = sum(e.total for e in evals.values())
         steps.append(f"add {chosen[0].label()}  cost {cost:.1f}->{new_cost:.1f}")
         cost = new_cost

@@ -46,11 +46,25 @@ class NodeKey:
     def __hash__(self) -> int:
         # NodeKeys are hashed millions of times per greedy run; cache the
         # field-tuple hash on first use (frozen blocks plain assignment).
-        h = self.__dict__.get("_hash")
-        if h is None:
+        # Plain attribute access beats __dict__.get by ~5x and this IS a
+        # measured hot path (every dict op on plans/universes lands here).
+        try:
+            return self._hash
+        except AttributeError:
             h = hash((self.table, self.cols, self.method))
             object.__setattr__(self, "_hash", h)
-        return h
+            return h
+
+    def gkey(self) -> Tuple[str, frozenset, str]:
+        """ColSet-group key (table, column SET, method), cached — the
+        planner engine's per-round group pass would otherwise rebuild
+        the frozenset for every target every round."""
+        try:
+            return self._gkey
+        except AttributeError:
+            g = (self.table, frozenset(self.cols), self.method)
+            object.__setattr__(self, "_gkey", g)
+            return g
 
     def label(self) -> str:
         return f"{self.table}({','.join(self.cols)})^{self.method}"
@@ -193,11 +207,13 @@ class EstimationPlanner:
 
     def __init__(self, tables: Dict[str, Table],
                  existing: Optional[Dict[NodeKey, float]] = None,
-                 backend: str = "numpy", use_engine: bool = True):
+                 backend: str = "numpy", use_engine: bool = True,
+                 record: bool = True):
         self.tables = tables
         self.existing = dict(existing or {})
         self.backend = backend
         self.use_engine = use_engine
+        self.record = record   # False: skip cross-run replay bookkeeping
         self._engine = None
         self._scost: Dict[Tuple[str, Tuple[str, ...], float], float] = {}
 
@@ -209,7 +225,8 @@ class EstimationPlanner:
             from .planner_engine import PlannerEngine
             self._engine = PlannerEngine(self.tables, self.existing,
                                          backend=self.backend,
-                                         scost_memo=self._scost)
+                                         scost_memo=self._scost,
+                                         record=self.record)
         return self._engine
 
     def _sampling_cost(self, key: NodeKey, f: float) -> float:
@@ -467,10 +484,10 @@ class EstimationPlanner:
             remaining = sorted(remaining, key=lambda k: (len(k.cols), k.cols))
             k = remaining[-1]
             rest = remaining[:-1]
-            tbl = self.tables[k.table]
-            # option 1: SAMPLED
+            # option 1: SAMPLED (priced via the shared §5.1 cost memo, so
+            # optimal() and the greedy paths cannot drift)
             recurse({**states, k: (State.SAMPLED, None)}, rest,
-                    cost + sampling_cost(tbl, k, f))
+                    cost + self._sampling_cost(k, f))
             # option 2: each deduction; children must be decided too
             for d in universe.get(k, []):
                 new_children = [c for c in d.children
@@ -513,6 +530,36 @@ class EstimationPlanner:
         return self._resolve_plan(
             plan, lambda k: sample_cf(
                 manager, IndexDef(k.table, k.cols, k.method), plan.f))
+
+    def execute_cached(self, plan: Plan, manager: SampleManager,
+                       cache: Dict[Tuple[NodeKey, float], SizeEstimate],
+                       engine: Optional[EstimationEngine] = None,
+                       scalar: bool = False) -> Dict[NodeKey, SizeEstimate]:
+        """`execute` with SAMPLED estimates cached by (NodeKey, f) — the
+        online-session path.  A SAMPLED node's estimate is a pure function
+        of (node, f) given the manager's order-independent samples, so
+        only cache misses are estimated (batched by default, or via the
+        scalar `sample_cf` reference with `scalar=True`); deductions are
+        re-resolved from the plan each call.  Returns estimates identical
+        to a fresh `execute`/`execute_scalar` on the same plan."""
+        sampled = [k for k, n in plan.nodes.items()
+                   if n.state is State.SAMPLED]
+        missing = [k for k in sampled if (k, plan.f) not in cache]
+        if missing:
+            if scalar:
+                for k in missing:
+                    cache[(k, plan.f)] = sample_cf(
+                        manager, IndexDef(k.table, k.cols, k.method),
+                        plan.f)
+            else:
+                if engine is None:
+                    engine = EstimationEngine(self.tables, manager)
+                assert engine.manager is manager, \
+                    "engine.manager must be the manager passed in"
+                for k, est in engine.estimate_batch(missing,
+                                                    plan.f).items():
+                    cache[(k, plan.f)] = est
+        return self._resolve_plan(plan, lambda k: cache[(k, plan.f)])
 
     def _resolve_plan(self, plan: Plan, sampled_est
                       ) -> Dict[NodeKey, SizeEstimate]:

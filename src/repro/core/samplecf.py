@@ -11,6 +11,7 @@ index built on the sample, before compression (paper §5.1).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -30,16 +31,31 @@ class SizeEstimate:
 
 
 class SampleManager:
-    """Caches per-(table, f) samples so sampling cost is paid once (§4.1)."""
+    """Caches per-(table, f) samples so sampling cost is paid once (§4.1).
+
+    Each (table, f) sample is drawn from its own seed-derived RNG stream,
+    so the sample content depends only on (seed, table, f) — never on the
+    *order* samples were first requested in.  A long-lived manager (the
+    online `AdvisorSession`) therefore produces exactly the samples a
+    fresh equal-seed manager would, whatever was drawn before.
+    """
 
     def __init__(self, tables: Dict[str, Table], seed: int = 0):
         self.tables = dict(tables)
+        self.seed = int(seed)
         self._samples: Dict[Tuple[str, float], Table] = {}
-        self._rng = np.random.default_rng(seed)
         self.sampling_calls = 0  # how many fresh samples were drawn
 
     def add_table(self, table: Table) -> None:
         self.tables[table.name] = table
+
+    def _rng_for(self, table_name: str, f: float) -> np.random.Generator:
+        # the f quantization MUST match the sample-cache key below: a
+        # finer-grained seed would reintroduce draw-order dependence for
+        # f values that collide in the cache
+        key = (self.seed, zlib.crc32(table_name.encode("utf-8")),
+               int(round(round(f, 6) * 1e6)))
+        return np.random.default_rng(key)
 
     def get_sample(self, table_name: str, f: float) -> Table:
         key = (table_name, round(f, 6))
@@ -47,7 +63,8 @@ class SampleManager:
             t = self.tables[table_name]
             n = max(2, int(round(t.nrows * f)))
             n = min(n, t.nrows)
-            rows = self._rng.choice(t.nrows, size=n, replace=False)
+            rng = self._rng_for(table_name, f)
+            rows = rng.choice(t.nrows, size=n, replace=False)
             self._samples[key] = t.take(np.sort(rows))
             self.sampling_calls += 1
         return self._samples[key]

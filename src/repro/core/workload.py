@@ -40,6 +40,25 @@ class BulkInsert:
 Statement = Union[Query, BulkInsert]
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkloadDelta:
+    """One batch of workload mutations (the online-session delta unit).
+
+    Statement *names* are the stable ids: `added` appends new statements
+    (their names must be fresh), `removed` drops statements by name, and
+    `reweighted` replaces the weight of existing statements in place.
+    Statement order is preserved: survivors keep their relative order and
+    additions go to the end — exactly how `Workload.apply_delta` builds
+    the resulting workload a fresh advisor would be given.
+    """
+    added: Tuple[Statement, ...] = ()
+    removed: Tuple[str, ...] = ()
+    reweighted: Tuple[Tuple[str, float], ...] = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.added or self.removed or self.reweighted)
+
+
 @dataclasses.dataclass
 class Workload:
     schema: Schema
@@ -50,6 +69,52 @@ class Workload:
 
     def updates(self) -> List[BulkInsert]:
         return [s for s in self.statements if isinstance(s, BulkInsert)]
+
+    # -- delta API (stable statement ids = names) -----------------------
+    def by_name(self) -> Dict[str, Statement]:
+        out: Dict[str, Statement] = {}
+        for s in self.statements:
+            if s.name in out:
+                raise ValueError(f"duplicate statement name {s.name!r}")
+            out[s.name] = s
+        return out
+
+    def apply_delta(self, delta: WorkloadDelta) -> "Workload":
+        """The resulting workload after `delta` (functional; `self` is
+        untouched).  Reweights apply in place, removals drop, additions
+        append — so a fresh advisor on the result sees statements in the
+        same order an `AdvisorSession` maintains them."""
+        have = self.by_name()
+        for name in delta.removed:
+            if name not in have:
+                raise KeyError(f"cannot remove unknown statement {name!r}")
+        removed = set(delta.removed)
+        reweight: Dict[str, float] = {}
+        for name, w in delta.reweighted:
+            if name not in have:
+                raise KeyError(f"cannot reweight unknown statement {name!r}")
+            if name in removed:
+                raise ValueError(f"statement {name!r} both removed and "
+                                 "reweighted in one delta")
+            reweight[name] = float(w)
+        seen_add = set()
+        for s in delta.added:
+            if s.name in have or s.name in seen_add:
+                raise ValueError(f"added statement name {s.name!r} is not "
+                                 "fresh")
+            seen_add.add(s.name)
+            if s.table not in self.schema.tables:
+                raise KeyError(f"added statement {s.name!r} references "
+                               f"unknown table {s.table!r}")
+        stmts: List[Statement] = []
+        for s in self.statements:
+            if s.name in removed:
+                continue
+            w = reweight.get(s.name)
+            stmts.append(s if w is None
+                         else dataclasses.replace(s, weight=w))
+        stmts.extend(delta.added)
+        return Workload(schema=self.schema, statements=stmts)
 
 
 # ---------------------------------------------------------------------------

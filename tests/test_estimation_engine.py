@@ -361,6 +361,48 @@ class TestGreedyVsOptimal:
         o = planner.optimal(targets, 0.05, 0.8, 0.85)
         assert g.feasible and o.feasible
 
+    @pytest.mark.parametrize("method", ["NS", "LDICT"])
+    def test_optimal_plan_executes_through_batched_engine(self, schema,
+                                                          method):
+        """App. D plans run through the batched EstimationEngine exactly
+        like greedy plans: byte-identical to the scalar execute path."""
+        planner = EstimationPlanner(schema.tables)
+        targets = make_targets(method, 6)
+        plan = planner.optimal(targets, 0.05, 0.8, 0.85)
+        mgr_s = SampleManager(schema.tables, seed=0)
+        mgr_b = SampleManager(schema.tables, seed=0)
+        ests_s = planner.execute_scalar(plan, mgr_s)
+        ests_b = planner.execute(plan, mgr_b)
+        assert set(ests_s) == set(ests_b)
+        assert any(n.state is State.SAMPLED for n in plan.nodes.values())
+        for k, ref in ests_s.items():
+            got = ests_b[k]
+            assert (got.est_bytes == ref.est_bytes and got.cf == ref.cf
+                    and got.cost_pages == ref.cost_pages
+                    and got.method == ref.method), k.label()
+
+    def test_optimal_execute_cached_matches_scalar(self, schema):
+        """The session's (NodeKey, f)-cached executor resolves optimal
+        plans byte-identically too, and repeated calls hit the cache."""
+        planner = EstimationPlanner(schema.tables)
+        targets = make_targets("NS", 5)
+        plan = planner.optimal(targets, 0.05, 0.8, 0.85)
+        mgr_s = SampleManager(schema.tables, seed=0)
+        mgr_c = SampleManager(schema.tables, seed=0)
+        cache = {}
+        ests_s = planner.execute_scalar(plan, mgr_s)
+        ests_c = planner.execute_cached(plan, mgr_c, cache)
+        n_cached = len(cache)
+        assert n_cached == sum(1 for n in plan.nodes.values()
+                               if n.state is State.SAMPLED)
+        for k, ref in ests_s.items():
+            assert ests_c[k].est_bytes == ref.est_bytes
+        # second execution: all sampled estimates come from the cache
+        ests_c2 = planner.execute_cached(plan, mgr_c, cache)
+        assert len(cache) == n_cached
+        for k, ref in ests_c.items():
+            assert ests_c2[k].est_bytes == ref.est_bytes
+
     def test_infeasible_flagged_by_both(self, schema):
         """e/q so tight that even SampleCF cannot meet the bound for
         ORD-DEP methods: every plan must be flagged infeasible."""
