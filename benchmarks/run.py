@@ -20,6 +20,7 @@ BENCHES = [
     ("fig10_deduction_errors", T.fig10_deduction_errors),
     ("fig11_estimation_runtime", T.fig11_estimation_runtime),
     ("figs12_17_design_quality", T.figs12_17_design_quality),
+    ("workload_compression_quality", T.workload_compression_quality),
     ("tpu_layout_advisor", T.tpu_layout_advisor),
 ]
 

@@ -7,7 +7,7 @@
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
 from .session import AdvisorSession
-from .cost_engine import CostEngine
+from .cost_engine import CostEngine, chunked_config_costs
 from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
 from .planner_engine import PlannerEngine
@@ -17,11 +17,16 @@ from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer, \
     base_configuration, storage_used
 from .workload import BulkInsert, Query, Workload, WorkloadDelta, \
-    make_scaled_workload, make_tpch_like, make_tpch_workload
+    make_scaled_workload, make_scaled_workload_reference, make_tpch_like, \
+    make_tpch_workload
+from .workload_compression import ClusterIndex, CompressedWorkload, \
+    compress_workload
 
 __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation", "AdvisorSession",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
+    "chunked_config_costs",
+    "ClusterIndex", "CompressedWorkload", "compress_workload",
     "EstimationEngine", "batched_sample_cf",
     "EstimationPlanner", "NodeKey", "Plan", "State", "PlannerEngine",
     "ColumnDef", "IndexDef", "Predicate", "Table",
@@ -30,5 +35,6 @@ __all__ = [
     "Configuration", "SizeProvider", "WhatIfOptimizer",
     "base_configuration", "storage_used",
     "BulkInsert", "Query", "Workload", "WorkloadDelta",
-    "make_scaled_workload", "make_tpch_like", "make_tpch_workload",
+    "make_scaled_workload", "make_scaled_workload_reference",
+    "make_tpch_like", "make_tpch_workload",
 ]

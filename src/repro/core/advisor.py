@@ -11,6 +11,13 @@ search) -> candidate selection (top-k or Skyline, §6.1) -> enumeration
   staged   = DTA first, then compress chosen indexes (the poor decoupled
              strategy of Example 1)
   ablations= DTAc(None)/DTAc(Skyline)/DTAc(Backtrack) for Figures 12-13
+
+Large workloads: `AdvisorOptions.compression_budget = N` advises on at
+most ~N weighted representative statements instead of the raw workload
+(repro.core.workload_compression), reporting a per-recommendation cost-
+error certificate on the Recommendation (`compression_error_bound` /
+`compression_error_rel`).  `None` (default) — and any budget >= the
+statement count — runs the uncompressed pipeline bit-identically.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from .samplecf import SampleManager
 from .whatif import (Configuration, SizeProvider, WhatIfOptimizer,
                      base_configuration, storage_used)
 from .workload import Query, Workload
+from .workload_compression import CompressedWorkload, compress_workload
 
 
 @dataclasses.dataclass
@@ -51,6 +59,9 @@ class AdvisorOptions:
     estimation_backend: str = "numpy"      # "numpy" | "jax"
     use_batched_planner: bool = True       # batched §5.2 planner engine
     planner_backend: str = "numpy"         # "numpy" | "jax"
+    # advise on <= ~N weighted representatives (workload compression);
+    # None disables, and budget >= n_statements is an exact bypass
+    compression_budget: Optional[int] = None
 
     @staticmethod
     def dta() -> "AdvisorOptions":
@@ -115,6 +126,12 @@ class Recommendation:
     pool_size: int
     wall_seconds: float
     steps: List[str]
+    # workload-compression annotations (trailing defaults keep older
+    # construction sites and dataclasses.replace uses valid)
+    n_statements_full: int = 0      # raw workload statement count
+    n_representatives: int = 0      # statements actually advised on
+    compression_error_bound: float = 0.0   # certified |C_full - C_comp|
+    compression_error_rel: float = 0.0     # ... relative to `cost`
 
     @property
     def improvement(self) -> float:
@@ -134,6 +151,9 @@ class DesignAdvisor:
         self.optimizer = WhatIfOptimizer(workload, self.sizes)
         self.samples = SampleManager(self.schema.tables,
                                      seed=self.opt.sample_seed)
+        # populated by `recommend` when workload compression engages
+        self.compressed: Optional[CompressedWorkload] = None
+        self.inner: Optional["DesignAdvisor"] = None
 
     # ------------------------------------------------------------------
     def per_query_raw(self) -> Dict[str, List[IndexDef]]:
@@ -272,7 +292,8 @@ class DesignAdvisor:
         return enumerate_pool(self.optimizer, self.sizes, self.opt, pool,
                               base, budget_bytes, engine)
 
-    def recommend(self, budget_bytes: float) -> Recommendation:
+    def _recommend_full(self, budget_bytes: float) -> Recommendation:
+        """The uncompressed pipeline (every statement advised directly)."""
         t0 = time.perf_counter()
         base = base_configuration(self.schema)
 
@@ -285,13 +306,43 @@ class DesignAdvisor:
         pool, n_cand = self.select_pool(per_query_exp, merged_all, base,
                                         engine)
         res = self.enumerate_pool(pool, base, budget_bytes, engine)
+        n_full = len(self.workload.statements)
         return Recommendation(
             config=res.config, base=base, base_cost=base_cost, cost=res.cost,
             used_bytes=res.used_bytes, budget_bytes=budget_bytes,
             estimation_cost_pages=est_cost, estimation_plan=plan,
             n_sampled=n_s, n_deduced=n_d, candidate_count=n_cand,
             pool_size=len(pool), wall_seconds=time.perf_counter() - t0,
-            steps=res.steps)
+            steps=res.steps, n_statements_full=n_full,
+            n_representatives=n_full)
+
+    def recommend(self, budget_bytes: float) -> Recommendation:
+        """Full recommendation; with `opt.compression_budget` set (and
+        below the statement count) the pipeline runs on the compressed
+        weighted-representative workload and the returned recommendation
+        carries the certified cost-error bound.  A disabled or >= n
+        budget runs `_recommend_full` — bit-identical to a pre-compression
+        advisor (the exact-parity contract)."""
+        comp = compress_workload(self.workload, self.opt.compression_budget)
+        if comp is None:
+            self.compressed = None
+            self.inner = None
+            return self._recommend_full(budget_bytes)
+        t0 = time.perf_counter()
+        inner = DesignAdvisor(
+            comp.workload,
+            dataclasses.replace(self.opt, compression_budget=None))
+        inner.samples = self.samples   # draw-order-independent: shareable
+        self.compressed = comp
+        self.inner = inner
+        rec = inner._recommend_full(budget_bytes)
+        eps = comp.error_bound(rec.config, inner.sizes)
+        return dataclasses.replace(
+            rec, n_statements_full=comp.n_full,
+            n_representatives=comp.n_representatives,
+            compression_error_bound=eps,
+            compression_error_rel=eps / max(abs(rec.cost), 1e-12),
+            wall_seconds=time.perf_counter() - t0)
 
 
 def staged_recommend(workload: Workload, budget_bytes: float,

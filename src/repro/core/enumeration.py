@@ -75,8 +75,15 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
                      pool: Sequence[IndexDef], base: Configuration,
                      budget_bytes: float, variant: str = "backtrack",
                      max_indexes: int = 64,
-                     engine: Optional[CostEngine] = None) -> EnumerationResult:
-    """Engine-backed greedy: one vectorized pool scoring per step."""
+                     engine: Optional[CostEngine] = None,
+                     score_chunk_cells: int = 1 << 22) -> EnumerationResult:
+    """Engine-backed hierarchical greedy: candidates are partitioned by
+    table, a step re-scores only the partitions its chosen index touched
+    (the `stale` set), and each partition's vectorized scoring runs in
+    candidate chunks of at most `score_chunk_cells` matrix cells — so the
+    peak scratch allocation stays bounded on large workloads.  Chunking is
+    value-neutral: every candidate column is scored independently, so the
+    results are bit-identical to one monolithic scoring call."""
     assert variant in ("pure", "density", "backtrack")
     if engine is None:
         engine = CostEngine(optimizer.workload, sizes)
@@ -134,24 +141,31 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
     def rescore(t: str) -> None:
         c_id, sec_ids = engine.split(config, t)
         cur = evals[t]
+        nq = max(1, len(engine.blocks[t].queries))
         all_sec = sec_ks_by_table[t]
         benefit[all_sec] = -np.inf
         sec_ks = all_sec[~present[all_sec]]
-        if sec_ks.size:
+        step = max(1, score_chunk_cells // nq)
+        for lo in range(0, sec_ks.size, step):
+            ks = sec_ks[lo:lo + step]
             q_tot, upd_delta = engine.score_add_secondary(
-                t, c_id, cur.q_cost, pool_ids[sec_ks])
-            benefit[sec_ks] = cur.total - (q_tot + cur.u_total + upd_delta)
-            delta_used[sec_ks] = pool_sizes[sec_ks]
+                t, c_id, cur.q_cost, pool_ids[ks])
+            benefit[ks] = cur.total - (q_tot + cur.u_total + upd_delta)
+            delta_used[ks] = pool_sizes[ks]
         all_cl = cl_ks_by_table[t]
         benefit[all_cl] = -np.inf
         cl_ks = all_cl[~present[all_cl]]
         if cl_ks.size:
-            q_tot, upd_c = engine.score_replace_clustered(
-                t, sec_ids, pool_ids[cl_ks])
-            benefit[cl_ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
             old_c = config.clustered(t)
             old_size = sizes.size(old_c) if old_c is not None else 0.0
-            delta_used[cl_ks] = pool_sizes[cl_ks] - old_size
+            # the clustered-swap kernel allocates (nq, n_sec, chunk) paths
+            step = max(1, score_chunk_cells // (nq * max(1, len(sec_ids))))
+            for lo in range(0, cl_ks.size, step):
+                ks = cl_ks[lo:lo + step]
+                q_tot, upd_c = engine.score_replace_clustered(
+                    t, sec_ids, pool_ids[ks])
+                benefit[ks] = cur.total - (q_tot + upd_c + cur.sec_upd)
+                delta_used[ks] = pool_sizes[ks] - old_size
 
     for _ in range(max_indexes):
         if not n:

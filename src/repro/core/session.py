@@ -50,6 +50,7 @@ from .relation import IndexDef
 from .samplecf import SampleManager, SizeEstimate
 from .whatif import SizeProvider, WhatIfOptimizer, base_configuration
 from .workload import Query, Statement, Workload, WorkloadDelta
+from .workload_compression import ClusterIndex, CompressedWorkload
 
 
 @dataclasses.dataclass
@@ -81,16 +82,38 @@ class AdvisorSession:
     """
 
     def __init__(self, workload: Workload,
-                 options: Optional[AdvisorOptions] = None):
+                 options: Optional[AdvisorOptions] = None,
+                 samples: Optional[SampleManager] = None):
         workload.by_name()                  # validates name uniqueness
         self.schema = workload.schema
         self.workload = Workload(schema=workload.schema,
                                  statements=list(workload.statements))
         self.opt = options or AdvisorOptions()
+        # SampleManager draws are per-(table, fraction) seed-derived and
+        # order-independent, so an outer compressed session can hand its
+        # manager to successive inner sessions without changing estimates
+        self.samples = (samples if samples is not None
+                        else SampleManager(self.schema.tables,
+                                           seed=self.opt.sample_seed))
+        self._compressed_mode = self.opt.compression_budget is not None
+        if self._compressed_mode:
+            # outer mode: keep only O(delta) cluster membership here and
+            # delegate the heavy pipeline to an inner session over the
+            # derived representative workload (rebuilt on structural
+            # change, reweighted in place otherwise)
+            self._cluster = ClusterIndex.from_workload(self.workload)
+            self._inner: Optional["AdvisorSession"] = None
+            self._inner_comp: Optional[CompressedWorkload] = None
+            self._pending: List[WorkloadDelta] = []
+            self._est_cache: Dict[Tuple[NodeKey, float], SizeEstimate] = {}
+            self._retired: Set[str] = set()
+            self.rounds = 0
+            self.compression_rebuilds = 0
+            self.compression_reweights = 0
+            self.compression_bypasses = 0
+            return
         self.sizes = SizeProvider(self.schema)
         self.optimizer = WhatIfOptimizer(self.workload, self.sizes)
-        self.samples = SampleManager(self.schema.tables,
-                                     seed=self.opt.sample_seed)
         self.planner = EstimationPlanner(
             self.schema.tables, backend=self.opt.planner_backend,
             use_engine=self.opt.use_batched_planner)
@@ -139,6 +162,15 @@ class AdvisorSession:
         # added statements' tables) before any engine is touched, so a
         # bad delta raises here and leaves the session unchanged
         new_wl = self.workload.apply_delta(delta)
+        if self._compressed_mode:
+            # O(delta) cluster-membership maintenance; the inner session
+            # catches up lazily at the next recommend()
+            self._cluster.apply_delta(delta)
+            for name in delta.removed:
+                self._retired.add(name)
+            self.workload = new_wl
+            self._pending.append(delta)
+            return self
         if self.engine is not None:
             self.engine.apply_delta(delta)
             self.engine.workload = new_wl
@@ -267,10 +299,80 @@ class AdvisorSession:
                 changed)
 
     # ------------------------------------------------------------------
+    def _inner_options(self) -> AdvisorOptions:
+        return dataclasses.replace(self.opt, compression_budget=None)
+
+    def _make_inner(self, workload: Workload) -> "AdvisorSession":
+        """A fresh inner session sharing the outer SampleManager and the
+        (NodeKey, f)-keyed sampled-estimate cache — both order-independent,
+        so transplanting them across rebuilds cannot change any estimate
+        (the PR-4 property the incremental engines already rely on)."""
+        inner = AdvisorSession(workload, self._inner_options(),
+                               samples=self.samples)
+        self._est_cache.update(inner._sampled_est)
+        inner._sampled_est = self._est_cache
+        self.compression_rebuilds += 1
+        return inner
+
+    def _recommend_compressed(self, budget_bytes: float) -> Recommendation:
+        """Outer-mode recommend: derive the budgeted representative
+        workload from the incrementally-maintained `ClusterIndex`, then
+        reuse, reweight, or rebuild the inner session.
+
+        Representatives are signature-pure (content-addressed names,
+        canonical predicates), so membership churn that keeps the cluster
+        set intact only changes representative WEIGHTS — the reweight
+        fast path, which preserves every inner engine.  Structural change
+        (clusters appearing/disappearing) rebuilds the inner session: the
+        compressed statement order is signature-sorted, and an in-place
+        append could not reproduce it (float summation order is part of
+        the parity contract)."""
+        t0 = time.perf_counter()
+        self.rounds += 1
+        comp = self._cluster.derive(self.opt.compression_budget)
+        if comp is None:
+            # exact-parity bypass: inner session over the FULL workload
+            if self._inner is None or self._inner_comp is not None:
+                self._inner = self._make_inner(self.workload)
+            else:
+                for d in self._pending:
+                    self._inner.apply(d)
+            self._inner_comp = None
+            self._pending.clear()
+            self.compression_bypasses += 1
+            rec = self._inner.recommend(budget_bytes)
+            return dataclasses.replace(
+                rec, wall_seconds=time.perf_counter() - t0)
+        cur = (self._inner.workload.statements
+               if self._inner is not None and self._inner_comp is not None
+               else None)
+        new_stmts = comp.workload.statements
+        if cur is not None and [s.name for s in cur] == \
+                [s.name for s in new_stmts]:
+            diffs = {s.name: n.weight for s, n in zip(cur, new_stmts)
+                     if s.weight != n.weight}
+            if diffs:
+                self._inner.reweight(diffs)
+            self.compression_reweights += 1
+        else:
+            self._inner = self._make_inner(comp.workload)
+        self._inner_comp = comp
+        self._pending.clear()
+        rec = self._inner.recommend(budget_bytes)
+        eps = comp.error_bound(rec.config, self._inner.sizes)
+        return dataclasses.replace(
+            rec, n_statements_full=comp.n_full,
+            n_representatives=comp.n_representatives,
+            compression_error_bound=eps,
+            compression_error_rel=eps / max(abs(rec.cost), 1e-12),
+            wall_seconds=time.perf_counter() - t0)
+
     def recommend(self, budget_bytes: float) -> Recommendation:
         """Re-advise the current workload.  Identical to
         `DesignAdvisor(current_workload, options).recommend(budget)` —
         the correctness contract — at delta-proportional cost."""
+        if self._compressed_mode:
+            return self._recommend_compressed(budget_bytes)
         t0 = time.perf_counter()
         self.rounds += 1
         base = base_configuration(self.schema)
@@ -310,13 +412,15 @@ class AdvisorSession:
 
         res = enumerate_pool(self.optimizer, self.sizes, self.opt, pool,
                              base, budget_bytes, engine)
+        n_full = len(self.workload.statements)
         return Recommendation(
             config=res.config, base=base, base_cost=base_cost, cost=res.cost,
             used_bytes=res.used_bytes, budget_bytes=budget_bytes,
             estimation_cost_pages=est_cost, estimation_plan=plan,
             n_sampled=n_s, n_deduced=n_d, candidate_count=n_cand,
             pool_size=len(pool), wall_seconds=time.perf_counter() - t0,
-            steps=res.steps)
+            steps=res.steps, n_statements_full=n_full,
+            n_representatives=n_full)
 
     # ------------------------------------------------------------------
     @property
@@ -324,6 +428,14 @@ class AdvisorSession:
         """Incrementality counters (graph/record/replay/selection/cache
         hits) — the session's evidence that re-advising cost tracked the
         delta, asserted in tests and reported by the benchmark."""
+        if self._compressed_mode:
+            out = dict(self._inner.stats) if self._inner is not None else {}
+            out.update(
+                rounds=self.rounds,
+                compression_rebuilds=self.compression_rebuilds,
+                compression_reweights=self.compression_reweights,
+                compression_bypasses=self.compression_bypasses)
+            return out
         out = {
             "rounds": self.rounds,
             "selection_hits": self.selection_hits,

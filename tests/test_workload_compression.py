@@ -1,0 +1,283 @@
+"""Workload-compression tests: the certified error bound, the exact-parity
+bypass, clustering determinism, incremental ClusterIndex maintenance, the
+compressed AdvisorSession mode, and the vectorized scaled-workload generator.
+
+The deterministic suite below always runs; the hypothesis property twins at
+the bottom are guarded with a soft import (same pattern as test_session.py).
+"""
+import dataclasses
+import hashlib
+import random
+
+import pytest
+
+from repro.core import (AdvisorOptions, AdvisorSession, DesignAdvisor,
+                        base_configuration, chunked_config_costs,
+                        compress_workload, make_scaled_workload,
+                        make_scaled_workload_reference, make_tpch_like)
+from repro.core.workload import (BulkInsert, Query, Workload, WorkloadDelta)
+from repro.core.workload_compression import ClusterIndex
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return make_tpch_like(scale=0.2, z=0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def workload(schema):
+    return make_scaled_workload(schema, n_statements=120, seed=7)
+
+
+@pytest.fixture(scope="module")
+def budget_bytes(schema, workload):
+    adv = DesignAdvisor(workload)
+    base_size = sum(adv.sizes.size(i)
+                    for i in base_configuration(schema).indexes)
+    return 0.3 * base_size
+
+
+def _rec_equal(a, b):
+    return (a.config == b.config and a.cost == b.cost
+            and a.used_bytes == b.used_bytes)
+
+
+class TestCompression:
+    def test_budget_bounds_representatives(self, workload):
+        for budget in (16, 24, 48):
+            comp = compress_workload(workload, budget)
+            assert comp is not None
+            # the coarse tail can only exceed the budget when the budget is
+            # below the per-(kind, table) structural floor
+            n_tables = len(workload.schema.tables)
+            assert comp.n_representatives <= max(budget, 2 * n_tables)
+            assert comp.n_full == len(workload.statements)
+            # representative weights conserve total workload weight
+            assert sum(c.weight for c in comp.clusters) == pytest.approx(
+                sum(s.weight for s in workload.statements))
+
+    def test_membership_covers_workload(self, workload):
+        comp = compress_workload(workload, 24)
+        members = comp.cluster_of()
+        assert set(members) == {s.name for s in workload.statements}
+
+    def test_error_bound_holds(self, workload, budget_bytes):
+        """|true full-workload cost - compressed cost| <= reported bound."""
+        for budget in (16, 32, 64):
+            adv = DesignAdvisor(
+                workload, AdvisorOptions(compression_budget=budget))
+            rec = adv.recommend(budget_bytes)
+            assert rec.n_representatives < rec.n_statements_full
+            true_cost = float(chunked_config_costs(
+                workload, adv.inner.sizes, [rec.config],
+                chunk_statements=17)[0])
+            assert abs(true_cost - rec.cost) <= rec.compression_error_bound \
+                + 1e-9 * abs(true_cost)
+
+    def test_bypass_parity_is_exact(self, workload, budget_bytes):
+        """budget >= n_statements (or None) reproduces the uncompressed
+        recommendation bit-identically."""
+        n = len(workload.statements)
+        rec_full = DesignAdvisor(workload).recommend(budget_bytes)
+        for budget in (n, n + 1, 10 ** 6):
+            assert compress_workload(workload, budget) is None
+            rec_b = DesignAdvisor(workload, AdvisorOptions(
+                compression_budget=budget)).recommend(budget_bytes)
+            assert _rec_equal(rec_b, rec_full)
+            assert rec_b.compression_error_bound == 0.0
+            assert rec_b.n_representatives == rec_b.n_statements_full == n
+
+    def test_clustering_deterministic_and_order_stable(self, workload):
+        comp = compress_workload(workload, 24)
+        again = compress_workload(workload, 24)
+        assert comp.workload.statements == again.workload.statements
+        assert comp.cluster_of() == again.cluster_of()
+        for seed in (0, 1):
+            shuffled = list(workload.statements)
+            random.Random(seed).shuffle(shuffled)
+            comp_s = compress_workload(
+                Workload(schema=workload.schema, statements=shuffled), 24)
+            assert comp_s.workload.statements == comp.workload.statements
+            assert comp_s.cluster_of() == comp.cluster_of()
+
+    def test_incremental_index_matches_fresh(self, schema, workload):
+        ix = ClusterIndex.from_workload(workload)
+        wl = workload
+        t = schema.tables["lineitem"]
+        cols = [c.name for c in t.columns]
+        deltas = [
+            WorkloadDelta(reweighted=tuple(
+                (s.name, s.weight * 2.5) for s in wl.statements[:6])),
+            WorkloadDelta(removed=tuple(
+                s.name for s in wl.statements[10:25])),
+            WorkloadDelta(added=(
+                Query("fresh0", "lineitem",
+                      (dataclasses.replace(
+                          wl.queries()[0].filters[0]),), (cols[1],),
+                      weight=1.5),
+                BulkInsert("fresh1", "lineitem", 512, weight=0.2))),
+        ]
+        for delta in deltas:
+            wl = wl.apply_delta(delta)
+            ix.apply_delta(delta)
+            inc = ix.derive(24)
+            fresh = compress_workload(wl, 24)
+            assert inc.workload.statements == fresh.workload.statements
+            assert inc.cluster_of() == fresh.cluster_of()
+
+
+class TestCompressedSession:
+    def test_session_matches_fresh_advisor(self, schema, workload,
+                                           budget_bytes):
+        opt = AdvisorOptions(compression_budget=24)
+        sess = AdvisorSession(workload, opt)
+        wl = workload
+        t = schema.tables["lineitem"]
+        cols = [c.name for c in t.columns]
+        deltas = [
+            WorkloadDelta(),     # round 0: initial recommend
+            WorkloadDelta(reweighted=tuple(
+                (s.name, 3.0) for s in workload.statements[:5])),
+            WorkloadDelta(added=(
+                Query("x0", "lineitem",
+                      (dataclasses.replace(
+                          workload.queries()[0].filters[0]),),
+                      (cols[2],), weight=1.0),)),
+            WorkloadDelta(removed=tuple(
+                s.name for s in workload.statements[20:40])),
+        ]
+        for delta in deltas:
+            if delta:
+                wl = wl.apply_delta(delta)
+                sess.apply(delta)
+            got = sess.recommend(budget_bytes)
+            want = DesignAdvisor(wl, opt).recommend(budget_bytes)
+            assert _rec_equal(got, want)
+            assert got.compression_error_bound == \
+                want.compression_error_bound
+
+    def test_session_reweight_fast_path(self, workload, budget_bytes):
+        opt = AdvisorOptions(compression_budget=24)
+        sess = AdvisorSession(workload, opt)
+        sess.recommend(budget_bytes)
+        # a ranking-preserving nudge keeps the cluster set unchanged, so
+        # the session only reweights the inner representatives
+        s0 = workload.statements[0]
+        delta = WorkloadDelta(reweighted=((s0.name, s0.weight * 1.0001),))
+        sess.apply(delta)
+        got = sess.recommend(budget_bytes)
+        want = DesignAdvisor(workload.apply_delta(delta),
+                             opt).recommend(budget_bytes)
+        assert _rec_equal(got, want)
+        assert sess.stats["compression_reweights"] == 1
+        assert sess.stats["compression_rebuilds"] == 1  # only round 0
+
+    def test_session_bypass_mode(self, workload, budget_bytes):
+        opt = AdvisorOptions(compression_budget=10 ** 6)
+        sess = AdvisorSession(workload, opt)
+        got = sess.recommend(budget_bytes)
+        want = DesignAdvisor(workload).recommend(budget_bytes)
+        assert _rec_equal(got, want)
+        assert sess.stats["compression_bypasses"] == 1
+
+
+class TestScaledWorkloadGenerator:
+    def test_structurally_equivalent_to_reference(self, schema):
+        for seed in (0, 3):
+            new = make_scaled_workload(schema, n_statements=200, seed=seed)
+            ref = make_scaled_workload_reference(schema, n_statements=200,
+                                                 seed=seed)
+            assert [s.name for s in new.statements] == \
+                [s.name for s in ref.statements]
+            assert [type(s) for s in new.statements] == \
+                [type(s) for s in ref.statements]
+            for s in new.statements:
+                t = schema.tables[s.table]
+                if isinstance(s, BulkInsert):
+                    assert s.nrows == max(t.nrows // 50, 50)
+                    continue
+                names = {c.name for c in t.columns}
+                assert 1 <= len(s.filters) <= 3
+                fcols = [p.col for p in s.filters]
+                assert len(set(fcols)) == len(fcols)
+                for p in s.filters:
+                    mn, mx = t.minmax(p.col)
+                    assert mn <= p.lo <= p.hi <= mx
+                assert 1 <= len(s.cols_used) <= 4
+                assert set(s.cols_used) <= names
+                assert 0.5 <= s.weight <= 2.0
+
+    def test_deterministic_and_frozen(self, schema):
+        wl = make_scaled_workload(schema, n_statements=200, seed=0)
+        again = make_scaled_workload(schema, n_statements=200, seed=0)
+        assert wl.statements == again.statements
+        fp = hashlib.sha256("\n".join(
+            repr(s) for s in wl.statements).encode()).hexdigest()[:16]
+        # frozen output of the vectorized generator at (scale=0.2, n=200,
+        # seed=0) — benchmark workloads must not drift silently
+        assert fp == "e1d567ccb6009d3f", fp
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property twins (soft import, as in test_session.py)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def _noop(*a, **k):
+        def deco(fn):
+            return fn
+        return deco
+    given = settings = _noop
+
+    class st:             # minimal stand-in so the decorators parse
+        @staticmethod
+        def data():
+            return None
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="property tests need hypothesis")
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_property_bound_bypass_and_stability(data):
+    schema = make_tpch_like(scale=0.1, z=0, seed=0)
+    seed = data.draw(st.integers(0, 50), label="workload seed")
+    n = data.draw(st.integers(30, 90), label="n_statements")
+    wl = make_scaled_workload(schema, n_statements=n, seed=seed)
+    adv0 = DesignAdvisor(wl)
+    base_size = sum(adv0.sizes.size(i)
+                    for i in base_configuration(schema).indexes)
+    budget_bytes = 0.3 * base_size
+
+    # (a) compressed recommend cost within the reported bound of the true
+    #     full-workload cost
+    budget = data.draw(st.integers(12, max(13, n - 5)),
+                       label="compression budget")
+    adv = DesignAdvisor(wl, AdvisorOptions(compression_budget=budget))
+    rec = adv.recommend(budget_bytes)
+    if adv.inner is not None:
+        true_cost = float(chunked_config_costs(
+            wl, adv.inner.sizes, [rec.config], chunk_statements=16)[0])
+        assert abs(true_cost - rec.cost) <= rec.compression_error_bound \
+            + 1e-9 * abs(true_cost)
+
+    # (b) budget >= n reproduces the uncompressed recommendation exactly
+    rec_full = adv0.recommend(budget_bytes)
+    rec_b = DesignAdvisor(wl, AdvisorOptions(
+        compression_budget=n)).recommend(budget_bytes)
+    assert _rec_equal(rec_b, rec_full)
+
+    # (c) clustering is deterministic and stable under reordering
+    comp = compress_workload(wl, min(budget, n - 1))
+    if comp is not None:
+        shuffled = list(wl.statements)
+        random.Random(seed).shuffle(shuffled)
+        comp_s = compress_workload(
+            Workload(schema=wl.schema, statements=shuffled),
+            min(budget, n - 1))
+        assert comp_s.workload.statements == comp.workload.statements
+        assert comp_s.cluster_of() == comp.cluster_of()
