@@ -11,6 +11,7 @@ index built on the sample, before compression (paper §5.1).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import zlib
 from typing import Dict, Optional, Tuple
 
@@ -19,6 +20,43 @@ import numpy as np
 from . import compression
 from .relation import (IndexDef, Table, build_index_data, rows_per_page,
                        uncompressed_pages)
+
+
+def table_fingerprint(table: Table) -> str:
+    """Content digest of a table: name, column defs, row count, and the
+    raw int64 column buffers.  Cached in the table's stats cache — tables
+    are immutable once built (deltas produce new Table objects), so the
+    digest is computed at most once per table object."""
+    key = ("content_fingerprint",)
+    fp = table._stats_cache.get(key)
+    if fp is None:
+        h = hashlib.sha256()
+        h.update(table.name.encode("utf-8"))
+        h.update(str(table.nrows).encode("ascii"))
+        for c in table.columns:
+            h.update(f"|{c.name}:{c.width}".encode("utf-8"))
+            h.update(np.ascontiguousarray(table.values[c.name]).tobytes())
+        fp = table._stats_cache[key] = h.hexdigest()
+    return fp
+
+
+def schema_fingerprint(schema, sample_seed: int) -> str:
+    """Digest identifying everything SampleCF estimates depend on: every
+    table's content, the foreign keys, and the sampling seed.
+
+    Two workloads with equal fingerprints draw byte-identical samples for
+    any (table, f) and therefore produce byte-identical `SizeEstimate`s
+    for any (NodeKey, f) — the soundness condition for sharing one
+    `SampleManager` and one sampled-estimate cache across tenants (the
+    fleet service's cross-tenant amortization)."""
+    h = hashlib.sha256()
+    h.update(str(int(sample_seed)).encode("ascii"))
+    for name in sorted(schema.tables):
+        h.update(table_fingerprint(schema.tables[name]).encode("ascii"))
+    for fk in schema.foreign_keys:
+        h.update(f"|{fk.fact_table}.{fk.fk_col}->"
+                 f"{fk.dim_table}.{fk.dim_key}".encode("utf-8"))
+    return h.hexdigest()
 
 
 @dataclasses.dataclass

@@ -83,7 +83,9 @@ class AdvisorSession:
 
     def __init__(self, workload: Workload,
                  options: Optional[AdvisorOptions] = None,
-                 samples: Optional[SampleManager] = None):
+                 samples: Optional[SampleManager] = None,
+                 sampled_cache: Optional[Dict[Tuple[NodeKey, float],
+                                              SizeEstimate]] = None):
         workload.by_name()                  # validates name uniqueness
         self.schema = workload.schema
         self.workload = Workload(schema=workload.schema,
@@ -95,7 +97,18 @@ class AdvisorSession:
         self.samples = (samples if samples is not None
                         else SampleManager(self.schema.tables,
                                            seed=self.opt.sample_seed))
+        # `sampled_cache` lets MANY sessions share one (NodeKey, f) ->
+        # SizeEstimate dict.  Estimates are pure functions of (schema
+        # content, sample_seed, NodeKey, f) — see samplecf.schema_
+        # fingerprint — so sharing is bit-exact between sessions whose
+        # fingerprints match (the fleet service groups tenants by it);
+        # sharing across MISMATCHED fingerprints silently corrupts
+        # estimates, so callers own that grouping.
         self._compressed_mode = self.opt.compression_budget is not None
+        # monotone workload version: bumped by every applied delta; keys
+        # the peek_estimation_plan() memo below
+        self.workload_version = 0
+        self._peeked = None
         if self._compressed_mode:
             # outer mode: keep only O(delta) cluster membership here and
             # delegate the heavy pipeline to an inner session over the
@@ -105,7 +118,8 @@ class AdvisorSession:
             self._inner: Optional["AdvisorSession"] = None
             self._inner_comp: Optional[CompressedWorkload] = None
             self._pending: List[WorkloadDelta] = []
-            self._est_cache: Dict[Tuple[NodeKey, float], SizeEstimate] = {}
+            self._est_cache: Dict[Tuple[NodeKey, float], SizeEstimate] = (
+                sampled_cache if sampled_cache is not None else {})
             self._retired: Set[str] = set()
             self.rounds = 0
             self.compression_rebuilds = 0
@@ -128,7 +142,8 @@ class AdvisorSession:
         # incremental caches
         self._queries: Dict[str, _QueryEntry] = {}
         self._selections: Dict[str, _Selection] = {}
-        self._sampled_est: Dict[Tuple[NodeKey, float], SizeEstimate] = {}
+        self._sampled_est: Dict[Tuple[NodeKey, float], SizeEstimate] = (
+            sampled_cache if sampled_cache is not None else {})
         self._registered: Dict[NodeKey, float] = {}
         # raw candidate key -> [(interned NodeKey, compressed variant)]:
         # reusing the SAME NodeKey objects across rounds turns the
@@ -162,6 +177,8 @@ class AdvisorSession:
         # added statements' tables) before any engine is touched, so a
         # bad delta raises here and leaves the session unchanged
         new_wl = self.workload.apply_delta(delta)
+        self.workload_version += 1
+        self._peeked = None
         if self._compressed_mode:
             # O(delta) cluster-membership maintenance; the inner session
             # catches up lazily at the next recommend()
@@ -262,23 +279,59 @@ class AdvisorSession:
                 out.setdefault(k, []).append(v)
         return out
 
-    def _estimate_sizes(self, raw_union: List[IndexDef]
+    def _plan_targets(self, raw_union: List[IndexDef]
+                      ) -> Tuple[Dict[NodeKey, List[IndexDef]],
+                                 Optional[Plan]]:
+        """Derive this round's (NodeKey -> variants, estimation Plan)
+        pair — the pure planning half of `_estimate_sizes`."""
+        tkey_to_defs = self._estimation_targets(raw_union)
+        targets = list(tkey_to_defs)
+        if not targets:
+            return tkey_to_defs, None
+        if self.opt.use_deduction:
+            plan = self.planner.plan(targets, self.opt.e, self.opt.q)
+        else:
+            plan = self.planner.plan_all_sampled(targets, self.opt.e,
+                                                 self.opt.q)
+        return tkey_to_defs, plan
+
+    def peek_estimation_plan(self) -> Optional[Plan]:
+        """Plan this round's size estimation WITHOUT executing it.
+
+        Memoized by `workload_version`: the (candidate universe, target
+        map, Plan) triple computed here is reused verbatim by the next
+        `recommend()` on the same version, so peeking costs nothing
+        extra.  The fleet service peeks every admitted tenant's plan to
+        union their missing (NodeKey, f) SampleCF targets into one
+        cross-tenant batched prefetch before the recommends run.
+        Returns None in compressed (outer) mode — the representative
+        workload is only derived inside recommend — and when the round
+        has no compressed candidates to estimate."""
+        if self._compressed_mode:
+            return None
+        if self._peeked is not None and \
+                self._peeked[0] == self.workload_version:
+            return self._peeked[3]
+        universe = self._candidate_universe()
+        tkey_to_defs, plan = self._plan_targets(universe[2])
+        self._peeked = (self.workload_version, universe, tkey_to_defs, plan)
+        return plan
+
+    def _estimate_sizes(self, raw_union: List[IndexDef],
+                        planned: Optional[Tuple[Dict[NodeKey,
+                                                     List[IndexDef]],
+                                                Optional[Plan]]] = None
                         ) -> Tuple[float, Optional[Plan], int, int,
                                    Set[Tuple]]:
         """`DesignAdvisor.estimate_sizes` with the persistent planner and
         the (NodeKey, f) SampleCF cache.  Returns the usual aggregates
         plus the set of index keys whose registered size CHANGED this
         round — the selection stage's invalidation set."""
-        tkey_to_defs = self._estimation_targets(raw_union)
-        targets = list(tkey_to_defs)
+        tkey_to_defs, plan = (planned if planned is not None
+                              else self._plan_targets(raw_union))
         changed: Set[Tuple] = set()
-        if not targets:
+        if plan is None:
             return 0.0, None, 0, 0, changed
-        if self.opt.use_deduction:
-            plan = self.planner.plan(targets, self.opt.e, self.opt.q)
-        else:
-            plan = self.planner.plan_all_sampled(targets, self.opt.e,
-                                                 self.opt.q)
         before = len(self._sampled_est)
         ests = self.planner.execute_cached(
             plan, self.samples, self._sampled_est, engine=self.est_engine,
@@ -376,8 +429,19 @@ class AdvisorSession:
         t0 = time.perf_counter()
         self.rounds += 1
         base = base_configuration(self.schema)
-        per_query_exp, merged_all, raw_union = self._candidate_universe()
-        est_cost, plan, n_s, n_d, changed = self._estimate_sizes(raw_union)
+        peeked = self._peeked
+        if peeked is not None and peeked[0] == self.workload_version:
+            # reuse the universe + plan peek_estimation_plan() derived
+            # for this exact workload version (same inputs, same code
+            # path — bit-exact with the un-peeked round)
+            per_query_exp, merged_all, raw_union = peeked[1]
+            planned = (peeked[2], peeked[3])
+        else:
+            per_query_exp, merged_all, raw_union = self._candidate_universe()
+            planned = None
+        self._peeked = None
+        est_cost, plan, n_s, n_d, changed = self._estimate_sizes(
+            raw_union, planned)
 
         engine = self.engine
         if engine is not None:

@@ -292,9 +292,12 @@ def decode_step(params: Params, state: Params, cfg: ModelConfig,
                 ) -> Tuple[jnp.ndarray, Params]:
     """One-token decode.  tokens: (B, 1) -> logits (B, 1, vocab_p).
 
-    `active` (B,) bool marks slots whose position should advance (inactive
-    slots' cache writes land at their current pos and are overwritten when
-    the slot is reused; their outputs must be ignored by the caller)."""
+    `active` (B,) bool marks slots that are really decoding this step.
+    Inactive slots neither advance their position nor mutate recurrent
+    state: their attention-KV write lands at their current pos and is
+    overwritten when the slot next steps for real, and mamba/rwkv
+    recurrent updates are masked back to the old state below.  Their
+    logits are garbage and must be ignored by the caller."""
     x = _embed_input(params, cfg, tokens, None)
     pos = state["pos"]
     if active is None:
@@ -302,6 +305,15 @@ def decode_step(params: Params, state: Params, cfg: ModelConfig,
     else:
         adv = active.astype(pos.dtype)
     new_state: Params = {"pos": pos + adv}
+
+    def keep_active(new, old, batch_axis):
+        """new where the slot is active, old otherwise (recurrent state
+        of inactive slots must not see the pad token)."""
+        if active is None:
+            return new
+        shape = [1] * new.ndim
+        shape[batch_axis] = -1
+        return jnp.where(active.reshape(shape), new, old)
 
     if is_hybrid(cfg):
         g = cfg.hybrid
@@ -348,7 +360,10 @@ def decode_step(params: Params, state: Params, cfg: ModelConfig,
             body, x, (params["groups"], state["kv"]["k"], state["kv"]["v"],
                       state["mamba"]["conv"], state["mamba"]["ssm"]))
         new_state["kv"] = {"k": k2, "v": v2}
-        new_state["mamba"] = {"conv": conv2, "ssm": ssm2}
+        # conv/ssm: (n_groups, n_mamba, B, ...) — batch axis 2
+        new_state["mamba"] = {
+            "conv": keep_active(conv2, state["mamba"]["conv"], 2),
+            "ssm": keep_active(ssm2, state["mamba"]["ssm"], 2)}
 
     elif is_rwkv(cfg):
         def body(xc, inp):
@@ -363,7 +378,11 @@ def decode_step(params: Params, state: Params, cfg: ModelConfig,
         x, (tm2, cm2, wkv2) = lax.scan(
             body, x, (params["layers"], rs["tm_shift"], rs["cm_shift"],
                       rs["wkv"]))
-        new_state["rwkv"] = {"tm_shift": tm2, "cm_shift": cm2, "wkv": wkv2}
+        # tm/cm/wkv: (L, B, ...) — batch axis 1
+        new_state["rwkv"] = {
+            "tm_shift": keep_active(tm2, rs["tm_shift"], 1),
+            "cm_shift": keep_active(cm2, rs["cm_shift"], 1),
+            "wkv": keep_active(wkv2, rs["wkv"], 1)}
 
     else:
         def body(xc, inp):

@@ -1,0 +1,400 @@
+"""Multi-tenant advisor fleet service: continuous batching for sessions.
+
+`ServeEngine` multiplexes decode slots over one model; this service
+multiplexes request slots over many tenant `AdvisorSession`s.  Each
+tenant owns a workload and a stream of requests (workload deltas and
+`recommend` calls) submitted through an async-style queue of
+Future-backed `FleetTicket`s; the service loop mirrors the repaired
+serve-engine step — admit queued requests into free slots, run the
+batched shared work, execute each slot, retire — with the same
+admission-control surface (`QueueFull` on a bounded queue).
+
+Cross-tenant amortization, the reason a fleet beats N independent
+advisors:
+
+* **Shared samples** — tenants are grouped by
+  `samplecf.schema_fingerprint` (schema content + sample seed) and an
+  estimation backend; each group owns ONE `SampleManager`, so the §4.1
+  per-(table, f) sampling cost is paid once per group, not per tenant.
+  Sample draws are seed-derived and order-independent (PR 4), which
+  makes the sharing invisible to any single tenant.
+* **Shared SampleCF cache** — each group owns one (NodeKey, f) ->
+  `SizeEstimate` dict handed to every member session
+  (`AdvisorSession(sampled_cache=...)`): an index variant sized for one
+  tenant is a cache hit for every other tenant on the same schema.
+* **Cross-tenant batched prefetch** — before executing a step's slots,
+  the service peeks every admitted recommend's estimation plan
+  (`AdvisorSession.peek_estimation_plan`, memoized so the peek is free
+  at recommend time), unions the group's missing (NodeKey, f) targets,
+  and sizes them in one `EstimationEngine.estimate_batch` call per
+  (group, f) — many tenants' targets stacked into the engine's grouped
+  (ntargets, nrows) kernel batches (vmapped jax kernels on the jax
+  backend, chunked NumPy otherwise).  `estimate_batch` results are
+  byte-identical to the scalar `sample_cf` per target, and therefore
+  independent of WHICH tenants' targets share a batch — union-batching
+  is bit-exact.
+
+Correctness contract (asserted in tests/test_fleet_service.py and every
+round of benchmarks/fleet_scaling.py): after any interleaved sequence of
+per-tenant deltas and recommends, each tenant's recommendation is
+exactly `==` — config, cost, used_bytes — a fresh `DesignAdvisor` built
+on that tenant's current workload.
+
+Budget isolation: every tenant carries a `TenantBudget` — a workload
+size cap enforced before any delta is applied, a pending-request cap
+enforced at submit time, and an optional per-tenant workload-compression
+budget overriding the shared options — so one noisy tenant can neither
+starve the queue nor grow without bound.  Request failures (bad deltas,
+budget violations) resolve that tenant's ticket with the exception and
+leave every other slot untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Tuple
+
+from ..core.advisor import AdvisorOptions
+from ..core.estimation_engine import EstimationEngine
+from ..core.estimation_graph import NodeKey, State
+from ..core.samplecf import SampleManager, SizeEstimate, schema_fingerprint
+from ..core.session import AdvisorSession
+from ..core.workload import Workload, WorkloadDelta
+from .engine import QueueFull
+
+
+class TenantBudgetExceeded(RuntimeError):
+    """A delta would grow a tenant's workload past its budget cap."""
+
+
+@dataclasses.dataclass
+class TenantBudget:
+    """Per-tenant isolation limits.
+
+    `max_statements` caps the tenant's workload size — checked against
+    the post-delta size BEFORE the delta touches the session, so a
+    violating delta fails cleanly and leaves the workload unchanged.
+    `max_pending` caps the tenant's queued + in-flight requests at
+    submit time (`QueueFull`).  `compression_budget` overrides the
+    tenant options' workload-compression budget (outer-mode sessions).
+    """
+    max_statements: Optional[int] = None
+    max_pending: Optional[int] = None
+    compression_budget: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    slots: int = 8                    # tenant requests executed per step
+    max_queue: Optional[int] = None   # global bound; submit raises QueueFull
+    prefetch: bool = True             # cross-tenant batched SampleCF prefetch
+    backend: str = "numpy"            # prefetch engine backend
+
+
+class FleetTicket:
+    """Future-backed handle for one submitted request.
+
+    `result()` blocks until the service loop retires the request; for a
+    recommend it returns the `Recommendation`, for a delta a small
+    summary dict.  Failures (invalid delta, `TenantBudgetExceeded`)
+    surface through `exception()` / a raising `result()`."""
+
+    def __init__(self, tenant_id: str, kind: str):
+        self.tenant_id = tenant_id
+        self.kind = kind              # "delta" | "recommend"
+        self.submitted_at = time.perf_counter()
+        self.resolved_at: Optional[float] = None
+        self._future: Future = Future()
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._future.exception(timeout)
+
+    @property
+    def latency(self) -> Optional[float]:
+        """submit -> resolve wall seconds (None while pending)."""
+        if self.resolved_at is None:
+            return None
+        return self.resolved_at - self.submitted_at
+
+    def _resolve(self, value=None, error: Optional[BaseException] = None
+                 ) -> None:
+        self.resolved_at = time.perf_counter()
+        if error is not None:
+            self._future.set_exception(error)
+        else:
+            self._future.set_result(value)
+
+
+@dataclasses.dataclass
+class _FleetRequest:
+    tenant_id: str
+    kind: str                             # "delta" | "recommend"
+    ticket: FleetTicket
+    delta: Optional[WorkloadDelta] = None
+    budget_bytes: Optional[float] = None
+
+
+class _ShareGroup:
+    """One (schema fingerprint, backend) equivalence class of tenants:
+    a shared order-independent SampleManager, a shared (NodeKey, f)
+    SampleCF cache, and the batched estimation engine the prefetch
+    stacks the group's targets into."""
+
+    def __init__(self, key: Tuple[str, str], tables: Dict, seed: int,
+                 backend: str):
+        self.key = key
+        self.samples = SampleManager(tables, seed=seed)
+        self.cache: Dict[Tuple[NodeKey, float], SizeEstimate] = {}
+        self.engine = EstimationEngine(tables, self.samples,
+                                       backend=backend)
+        self.n_tenants = 0
+
+
+@dataclasses.dataclass
+class _Tenant:
+    tenant_id: str
+    session: AdvisorSession
+    budget: TenantBudget
+    group: _ShareGroup
+    in_flight: Optional[_FleetRequest] = None
+    n_pending: int = 0                # queued + in-flight requests
+    deltas_applied: int = 0
+    recommends: int = 0
+
+
+class AdvisorFleetService:
+    """Slot-based continuous batching over many tenant AdvisorSessions.
+
+    Usage::
+
+        fleet = AdvisorFleetService(FleetConfig(slots=16))
+        fleet.register_tenant("t0", workload0, options)
+        fleet.register_tenant("t1", workload1, options)   # same schema:
+                                                          # shares samples
+        fleet.submit_delta("t0", WorkloadDelta(added=(...,)))
+        t = fleet.submit_recommend("t0", budget_bytes=2e6)
+        fleet.run_until_drained()
+        rec = t.result()          # == fresh DesignAdvisor on t0's workload
+    """
+
+    def __init__(self, fc: Optional[FleetConfig] = None):
+        self.fc = fc or FleetConfig()
+        if self.fc.slots < 1:
+            raise ValueError("need at least one slot")
+        self.tenants: Dict[str, _Tenant] = {}
+        self.groups: Dict[Tuple[str, str], _ShareGroup] = {}
+        self.queue: List[_FleetRequest] = []          # global arrival order
+        self.slots: List[Optional[_FleetRequest]] = [None] * self.fc.slots
+        self.steps = 0
+        self.retired = 0
+        self.prefetch_batches = 0     # (group, f) batched prefetch calls
+        self.prefetch_targets = 0     # targets sized by the prefetch
+        self.prefetch_hits = 0        # peeked targets already cached
+
+    # ------------------------------------------------------------------
+    # Tenants
+    # ------------------------------------------------------------------
+    def register_tenant(self, tenant_id: str, workload: Workload,
+                        options: Optional[AdvisorOptions] = None,
+                        budget: Optional[TenantBudget] = None) -> None:
+        if tenant_id in self.tenants:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
+        opt = options or AdvisorOptions()
+        budget = budget or TenantBudget()
+        if budget.compression_budget is not None:
+            opt = dataclasses.replace(
+                opt, compression_budget=budget.compression_budget)
+        if budget.max_statements is not None and \
+                len(workload.statements) > budget.max_statements:
+            raise TenantBudgetExceeded(
+                f"tenant {tenant_id!r}: initial workload of "
+                f"{len(workload.statements)} statements exceeds "
+                f"max_statements={budget.max_statements}")
+        key = (schema_fingerprint(workload.schema, opt.sample_seed),
+               opt.estimation_backend)
+        group = self.groups.get(key)
+        if group is None:
+            group = self.groups[key] = _ShareGroup(
+                key, workload.schema.tables, opt.sample_seed,
+                self.fc.backend)
+        group.n_tenants += 1
+        session = AdvisorSession(workload, opt, samples=group.samples,
+                                 sampled_cache=group.cache)
+        self.tenants[tenant_id] = _Tenant(tenant_id, session, budget, group)
+
+    # ------------------------------------------------------------------
+    # Submission (admission control)
+    # ------------------------------------------------------------------
+    def _submit(self, req: _FleetRequest) -> FleetTicket:
+        t = self.tenants[req.tenant_id]
+        if self.fc.max_queue is not None and \
+                len(self.queue) >= self.fc.max_queue:
+            raise QueueFull(
+                f"fleet queue at capacity ({self.fc.max_queue})")
+        if t.budget.max_pending is not None and \
+                t.n_pending >= t.budget.max_pending:
+            raise QueueFull(
+                f"tenant {req.tenant_id!r} at max_pending="
+                f"{t.budget.max_pending}")
+        t.n_pending += 1
+        self.queue.append(req)
+        return req.ticket
+
+    def submit_delta(self, tenant_id: str,
+                     delta: WorkloadDelta) -> FleetTicket:
+        return self._submit(_FleetRequest(
+            tenant_id, "delta", FleetTicket(tenant_id, "delta"),
+            delta=delta))
+
+    def submit_recommend(self, tenant_id: str,
+                         budget_bytes: float) -> FleetTicket:
+        return self._submit(_FleetRequest(
+            tenant_id, "recommend", FleetTicket(tenant_id, "recommend"),
+            budget_bytes=float(budget_bytes)))
+
+    # ------------------------------------------------------------------
+    # Service loop (mirrors ServeEngine: admit -> batch -> execute ->
+    # retire)
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Fill free slots from the queue in arrival order, at most one
+        in-flight request per tenant so each tenant's requests execute
+        in its own submission order (per-tenant FIFO)."""
+        for i in range(len(self.slots)):
+            if self.slots[i] is not None:
+                continue
+            for qi, req in enumerate(self.queue):
+                if self.tenants[req.tenant_id].in_flight is None:
+                    self.queue.pop(qi)
+                    self.slots[i] = req
+                    self.tenants[req.tenant_id].in_flight = req
+                    break
+            else:
+                break  # nothing admissible for this (or any later) slot
+
+    def _prefetch(self) -> None:
+        """Union-batch the admitted recommends' missing SampleCF targets.
+
+        For every admitted recommend, peek the tenant's estimation plan
+        (memoized — the subsequent recommend reuses it verbatim), take
+        its SAMPLED nodes not yet in the group cache, and size each
+        (group, f) union in ONE `estimate_batch` call.  Per-target
+        results are byte-identical to the scalar path, so cache content
+        does not depend on which tenants were batched together."""
+        missing: Dict[Tuple[Tuple[str, str], float], List[NodeKey]] = {}
+        seen: Dict[Tuple[Tuple[str, str], float], set] = {}
+        for req in self.slots:
+            if req is None or req.kind != "recommend":
+                continue
+            t = self.tenants[req.tenant_id]
+            try:
+                plan = t.session.peek_estimation_plan()
+            except Exception:
+                continue  # let the slot's recommend surface the error
+            if plan is None:
+                continue
+            gk = (t.group.key, plan.f)
+            got = seen.setdefault(gk, set())
+            for k, node in plan.nodes.items():
+                if node.state is not State.SAMPLED or k in got:
+                    continue
+                got.add(k)
+                if (k, plan.f) in t.group.cache:
+                    self.prefetch_hits += 1
+                else:
+                    missing.setdefault(gk, []).append(k)
+        for (group_key, f), keys in missing.items():
+            group = self.groups[group_key]
+            for k, est in group.engine.estimate_batch(keys, f).items():
+                group.cache[(k, f)] = est
+            self.prefetch_batches += 1
+            self.prefetch_targets += len(keys)
+
+    def _execute(self, req: _FleetRequest) -> None:
+        t = self.tenants[req.tenant_id]
+        try:
+            if req.kind == "delta":
+                assert req.delta is not None
+                cap = t.budget.max_statements
+                if cap is not None:
+                    projected = (len(t.session.workload.statements)
+                                 + len(req.delta.added)
+                                 - len(req.delta.removed))
+                    if projected > cap:
+                        raise TenantBudgetExceeded(
+                            f"tenant {req.tenant_id!r}: delta would grow "
+                            f"the workload to {projected} statements "
+                            f"(max_statements={cap})")
+                t.session.apply(req.delta)
+                t.deltas_applied += 1
+                req.ticket._resolve({
+                    "applied": True,
+                    "workload_version": t.session.workload_version,
+                    "n_statements": len(t.session.workload.statements)})
+            else:
+                assert req.budget_bytes is not None
+                rec = t.session.recommend(req.budget_bytes)
+                t.recommends += 1
+                req.ticket._resolve(rec)
+        except BaseException as e:      # isolate failures to this tenant
+            req.ticket._resolve(error=e)
+
+    def step(self) -> None:
+        """One service iteration: admit queued requests into free slots,
+        run the cross-tenant batched prefetch over the admitted
+        recommends, execute every slot, retire them all (a request is
+        one unit of work, so slots turn over every step)."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return
+        if self.fc.prefetch:
+            self._prefetch()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._execute(req)
+            t = self.tenants[req.tenant_id]
+            t.in_flight = None
+            t.n_pending -= 1
+            self.slots[i] = None
+            self.retired += 1
+        self.steps += 1
+
+    def run_until_drained(self, max_steps: int = 1_000_000) -> None:
+        while self.queue and self.steps < max_steps:
+            self.step()
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, float]:
+        out = {
+            "tenants": len(self.tenants),
+            "groups": len(self.groups),
+            "queued": len(self.queue),
+            "steps": self.steps,
+            "retired": self.retired,
+            "prefetch_batches": self.prefetch_batches,
+            "prefetch_targets": self.prefetch_targets,
+            "prefetch_hits": self.prefetch_hits,
+        }
+        out["shared_cache_entries"] = sum(
+            len(g.cache) for g in self.groups.values())
+        out["sampling_calls"] = sum(
+            g.samples.sampling_calls for g in self.groups.values())
+        return out
+
+    def tenant_stats(self, tenant_id: str) -> Dict[str, float]:
+        t = self.tenants[tenant_id]
+        out = dict(t.session.stats)
+        out.update(deltas_applied=t.deltas_applied,
+                   recommends=t.recommends,
+                   n_statements=len(t.session.workload.statements),
+                   group_tenants=t.group.n_tenants)
+        return out

@@ -2,9 +2,20 @@
 
 Requests carry a prompt; the engine prefills them into free slots of a
 fixed-size batch, decodes all active slots each step, and retires slots on
-EOS/max_tokens.  The KV cache codec (bf16 / q8) comes from the design
-advisor's LayoutPlan — the paper's compression decision applied to the
-serving "index".
+EOS (when `EngineConfig.eos_id` is set), on `max_new_tokens`, or on context
+overflow (the slot's position reaching `max_len`).  The KV cache codec
+(bf16 / q8) comes from the design advisor's LayoutPlan — the paper's
+compression decision applied to the serving "index".
+
+Slot isolation is the engine's core invariant: every decode — including
+the per-token prefill of a newly admitted request — passes an `active`
+mask to `decode_step`, so slots that are not really stepping neither
+advance their KV position nor mutate recurrent state.  A request therefore
+produces exactly the same tokens whether it runs alone or with requests
+admitted mid-flight into neighboring slots (asserted by the regression
+suite in tests/test_serve_engine.py).  Retired slots are reset before reuse
+so
+a new occupant never attends over its predecessor's KV entries.
 
 q8 KV is simulated functionally on CPU: the cache stores quantized values
 and the engine dequantizes on read via the kernels' ref codec (on TPU the
@@ -13,8 +24,7 @@ fused Pallas path applies).
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +34,10 @@ from ..models import model as MD
 from ..models.config import ModelConfig
 
 
+class QueueFull(RuntimeError):
+    """submit() on an engine whose bounded request queue is at capacity."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -31,6 +45,9 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # retired on context overflow, not EOS/max_tokens
+    # last prompt token, carried from prefill into the first decode step
+    _pending: Optional[int] = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -39,6 +56,8 @@ class EngineConfig:
     max_len: int = 256
     kv_dtype: str = "bf16"   # "bf16" | "f32"
     greedy: bool = True
+    eos_id: Optional[int] = None    # retire a slot when it emits this token
+    max_queue: Optional[int] = None  # submit() raises QueueFull beyond this
 
 
 class ServeEngine:
@@ -50,64 +69,96 @@ class ServeEngine:
         self.state = MD.init_serve_state(cfg, ec.batch_slots, ec.max_len,
                                          kv_dtype=kv_dt)
         self.slots: List[Optional[Request]] = [None] * ec.batch_slots
+        # per-slot sequence position (== state["pos"] on the device): the
+        # KV index the slot's NEXT token will be written to.  Drives the
+        # context-overflow retirement check without a device readback.
         self.slot_pos = np.zeros(ec.batch_slots, np.int32)
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._decode = jax.jit(
-            lambda p, s, t: MD.decode_step(p, s, cfg, t))
+            lambda p, s, t, a: MD.decode_step(p, s, cfg, t, a))
         self.steps = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.ec.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit a "
+                f"max_len={self.ec.max_len} KV cache")
+        if self.ec.max_queue is not None and \
+                len(self.queue) >= self.ec.max_queue:
+            raise QueueFull(
+                f"request queue at capacity ({self.ec.max_queue})")
         self.queue.append(req)
 
     def _admit(self) -> None:
-        """Prefill queued requests into free slots, token by token (slot-
-        isolated prefill through the shared batch decode step)."""
+        """Prefill queued requests into free slots, token by token.
+
+        Prefill runs through the shared batch decode step with an
+        `active` mask naming ONLY the admitted slot, so concurrently
+        decoding slots neither advance their positions nor write
+        pad-token KV — admission is invisible to in-flight requests."""
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
             self.slots[i] = req
-            # feed the prompt through decode steps for this slot only;
-            # other slots get a pad token and their outputs are ignored.
+            if self.slot_pos[i]:
+                # slot reuse: zero the retired occupant's position and
+                # recurrent state so the new prompt starts at position 0
+                # and never attends over its predecessor's KV entries
+                self.state = MD.reset_slot(self.state, self.cfg, i)
+                self.slot_pos[i] = 0
             for tok in req.prompt[:-1]:
-                self._step_token(i, tok, record=False)
-            self._last_token = req.prompt[-1]
+                self._step_token(i, tok)
             self.slot_pos[i] = len(req.prompt) - 1
-            req._pending = req.prompt[-1]  # type: ignore
+            req._pending = req.prompt[-1]
 
-    def _step_token(self, slot: int, token: int, record: bool) -> int:
+    def _step_token(self, slot: int, token: int) -> None:
+        """One single-slot decode step (prefill): only `slot` is active."""
         toks = np.zeros((self.ec.batch_slots, 1), np.int32)
         toks[slot, 0] = token
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks))
-        nxt = int(jnp.argmax(logits[slot, 0, : self.cfg.vocab]))
-        return nxt
+        mask = np.zeros(self.ec.batch_slots, bool)
+        mask[slot] = True
+        _, self.state = self._decode(self.params, self.state,
+                                     jnp.asarray(toks), jnp.asarray(mask))
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration: admit, decode all active slots, retire."""
+        """One engine iteration: admit, decode all active slots, retire.
+
+        Retirement: EOS (`ec.eos_id`, when set), `max_new_tokens`, or
+        context overflow — the slot's position reaching `max_len`, where
+        the next KV write would fall off the cache; overflow retirement
+        marks the request `truncated`."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
         toks = np.zeros((self.ec.batch_slots, 1), np.int32)
+        mask = np.zeros(self.ec.batch_slots, bool)
         for i in active:
             req = self.slots[i]
-            pending = getattr(req, "_pending", None)
-            toks[i, 0] = pending if pending is not None else \
+            mask[i] = True
+            toks[i, 0] = req._pending if req._pending is not None else \
                 req.out_tokens[-1]
         logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks))
+                                          jnp.asarray(toks),
+                                          jnp.asarray(mask))
         self.steps += 1
         for i in active:
             req = self.slots[i]
-            req._pending = None  # type: ignore
+            req._pending = None
+            self.slot_pos[i] += 1
             nxt = int(jnp.argmax(logits[i, 0, : self.cfg.vocab]))
             req.out_tokens.append(nxt)
-            if len(req.out_tokens) >= req.max_new_tokens:
+            hit_eos = self.ec.eos_id is not None and nxt == self.ec.eos_id
+            overflow = int(self.slot_pos[i]) >= self.ec.max_len
+            if hit_eos or overflow or \
+                    len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
+                req.truncated = (overflow and not hit_eos
+                                 and len(req.out_tokens) < req.max_new_tokens)
                 self.finished[req.uid] = req
                 self.slots[i] = None
 

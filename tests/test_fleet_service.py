@@ -1,0 +1,251 @@
+"""Fleet advisor service: multi-tenant continuous batching invariants.
+
+The load-bearing assertion is exact parity: whatever the interleaving of
+tenant deltas and recommends through the shared slots, every tenant's
+recommendation equals — config, cost, used_bytes — a fresh
+`DesignAdvisor` on that tenant's current workload.  The rest pins the
+amortization machinery (schema-fingerprint grouping, shared SampleCF
+cache, cross-tenant prefetch) and the isolation surface (admission
+control, per-tenant budgets, failure containment).
+
+Kept free of hypothesis/zstandard imports so the fleet regressions run
+in every environment.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AdvisorOptions, DesignAdvisor, WorkloadDelta,
+                        make_scaled_workload, make_tpch_like)
+from repro.core.samplecf import schema_fingerprint
+from repro.serve.advisor_service import (AdvisorFleetService, FleetConfig,
+                                         TenantBudget,
+                                         TenantBudgetExceeded)
+from repro.serve.engine import QueueFull
+
+BUDGET = 2_000_000
+
+
+def tenant_workload(schema, tid: str, n: int = 14, seed: int = 0):
+    """A per-tenant workload with tenant-prefixed statement names."""
+    wl = make_scaled_workload(schema, n_statements=n, seed=seed)
+    return dataclasses.replace(
+        wl, statements=[dataclasses.replace(s, name=f"{tid}_{s.name}")
+                        for s in wl.statements])
+
+
+def identical(a, b) -> bool:
+    return (a.config == b.config and a.cost == b.cost
+            and a.used_bytes == b.used_bytes)
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return make_tpch_like(scale=0.1, seed=0)
+
+
+def make_fleet(schema, n_tenants, opt=None, fc=None):
+    fleet = AdvisorFleetService(fc or FleetConfig(slots=3))
+    wls = {}
+    for i in range(n_tenants):
+        tid = f"t{i}"
+        wls[tid] = tenant_workload(schema, tid, seed=50 + i)
+        fleet.register_tenant(tid, wls[tid], opt or AdvisorOptions.dtac())
+    return fleet, wls
+
+
+class TestFleetParity:
+    def test_batched_recommends_match_fresh_advisor(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 5, opt)
+        tickets = {tid: fleet.submit_recommend(tid, BUDGET) for tid in wls}
+        fleet.run_until_drained()
+        for tid, tk in tickets.items():
+            fresh = DesignAdvisor(wls[tid], opt).recommend(BUDGET)
+            assert identical(tk.result(), fresh), tid
+        assert fleet.stats["groups"] == 1  # same schema: one share group
+
+    def test_interleaved_delta_storm_parity(self, schema):
+        """THE fleet contract: exact per-tenant parity under interleaved
+        per-tenant deltas and recommends sharing slots and caches."""
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 4, opt)
+        rng = np.random.default_rng(3)
+        for rnd in range(3):
+            tks = {}
+            for i, tid in enumerate(list(wls)):
+                wl = wls[tid]
+                names = [s.name for s in wl.statements]
+                removed = tuple(rng.choice(names, size=2, replace=False))
+                pool = make_scaled_workload(
+                    schema, n_statements=2,
+                    seed=900 + rnd * 10 + i).statements
+                added = tuple(
+                    dataclasses.replace(s, name=f"{tid}_r{rnd}_{j}")
+                    for j, s in enumerate(pool))
+                rw = tuple((n, float(rng.uniform(0.5, 2.0)))
+                           for n in rng.choice(
+                               [n for n in names if n not in removed],
+                               size=3, replace=False))
+                delta = WorkloadDelta(added=added, removed=removed,
+                                      reweighted=rw)
+                fleet.submit_delta(tid, delta)
+                wls[tid] = wl.apply_delta(delta)
+                tks[tid] = fleet.submit_recommend(tid, BUDGET)
+            fleet.run_until_drained()
+            for tid, tk in tks.items():
+                fresh = DesignAdvisor(wls[tid], opt).recommend(BUDGET)
+                assert identical(tk.result(), fresh), (rnd, tid)
+
+    def test_per_tenant_fifo(self, schema):
+        """A tenant's requests execute in its submission order: a
+        recommend submitted after a delta sees the post-delta workload
+        even though both were queued before the loop ran."""
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 1, opt)
+        wl = wls["t0"]
+        delta = WorkloadDelta(
+            removed=(wl.statements[0].name, wl.statements[1].name))
+        fleet.submit_delta("t0", delta)
+        tk = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        fresh = DesignAdvisor(wl.apply_delta(delta), opt).recommend(BUDGET)
+        assert identical(tk.result(), fresh)
+
+
+class TestSharing:
+    def test_fingerprint_grouping(self, schema):
+        """Tenants group by schema CONTENT + seed, not by object
+        identity; different content lands in different groups."""
+        other = make_tpch_like(scale=0.1, seed=1)
+        assert schema_fingerprint(schema, 0) == \
+            schema_fingerprint(make_tpch_like(scale=0.1, seed=0), 0)
+        assert schema_fingerprint(schema, 0) != schema_fingerprint(other, 0)
+        assert schema_fingerprint(schema, 0) != schema_fingerprint(schema, 1)
+
+        opt = AdvisorOptions.dtac()
+        fleet = AdvisorFleetService(FleetConfig(slots=2))
+        fleet.register_tenant("a", tenant_workload(schema, "a"), opt)
+        fleet.register_tenant(
+            "b", tenant_workload(make_tpch_like(scale=0.1, seed=0), "b",
+                                 seed=9), opt)
+        fleet.register_tenant("c", tenant_workload(other, "c"), opt)
+        assert fleet.stats["groups"] == 2
+        assert fleet.tenants["a"].group is fleet.tenants["b"].group
+        assert fleet.tenants["a"].group is not fleet.tenants["c"].group
+
+    def test_shared_cache_amortizes_sampling(self, schema):
+        """Evidence the sharing pays: co-scheduled tenants on one schema
+        are served almost entirely from the cross-tenant prefetch (zero
+        per-session SampleCF misses), and the group's sampling cost is
+        paid once, not per tenant."""
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 4, opt,
+                                fc=FleetConfig(slots=4))
+        for tid in wls:
+            fleet.submit_recommend(tid, BUDGET)
+        fleet.run_until_drained()
+        s = fleet.stats
+        assert s["groups"] == 1
+        assert s["prefetch_targets"] > 0
+        for tid in wls:
+            ts = fleet.tenant_stats(tid)
+            # every sampled estimate came from the shared prefetched cache
+            assert ts["samplecf_cache_misses"] == 0
+        # one SampleManager: the shared fleet draws strictly fewer
+        # samples than the same tenants run in isolated fleets (tenants'
+        # plans may pick different fractions f, so the shared count is
+        # bounded by distinct (table, f) pairs, not by one tenant's)
+        separate = 0
+        for tid, wl in wls.items():
+            solo = AdvisorFleetService(FleetConfig(slots=1))
+            solo.register_tenant(tid, wl, opt)
+            solo.submit_recommend(tid, BUDGET)
+            solo.run_until_drained()
+            separate += solo.stats["sampling_calls"]
+        assert s["sampling_calls"] < separate
+
+    def test_prefetch_off_still_exact(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 2, opt,
+                                fc=FleetConfig(slots=2, prefetch=False))
+        tks = {tid: fleet.submit_recommend(tid, BUDGET) for tid in wls}
+        fleet.run_until_drained()
+        for tid, tk in tks.items():
+            fresh = DesignAdvisor(wls[tid], AdvisorOptions.dtac()
+                                  ).recommend(BUDGET)
+            assert identical(tk.result(), fresh)
+
+
+class TestIsolation:
+    def test_queue_admission_control(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 2, opt,
+                                fc=FleetConfig(slots=1, max_queue=2))
+        fleet.submit_recommend("t0", BUDGET)
+        fleet.submit_recommend("t1", BUDGET)
+        with pytest.raises(QueueFull):
+            fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        fleet.submit_recommend("t0", BUDGET)  # capacity freed
+
+    def test_per_tenant_pending_cap(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet = AdvisorFleetService(FleetConfig(slots=1))
+        fleet.register_tenant("a", tenant_workload(schema, "a"), opt,
+                              TenantBudget(max_pending=1))
+        fleet.register_tenant("b", tenant_workload(schema, "b", seed=9),
+                              opt)
+        fleet.submit_recommend("a", BUDGET)
+        with pytest.raises(QueueFull):
+            fleet.submit_recommend("a", BUDGET)
+        fleet.submit_recommend("b", BUDGET)  # other tenants unaffected
+        fleet.run_until_drained()
+
+    def test_statement_budget_enforced_before_apply(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet = AdvisorFleetService(FleetConfig(slots=1))
+        wl = tenant_workload(schema, "a")
+        fleet.register_tenant("a", wl, opt,
+                              TenantBudget(max_statements=len(
+                                  wl.statements) + 1))
+        added = tuple(
+            dataclasses.replace(s, name=f"a_x{j}") for j, s in enumerate(
+                make_scaled_workload(schema, n_statements=3,
+                                     seed=7).statements))
+        tk = fleet.submit_delta("a", WorkloadDelta(added=added))
+        fleet.run_until_drained()
+        assert isinstance(tk.exception(), TenantBudgetExceeded)
+        # the violating delta never touched the session
+        assert len(fleet.tenants["a"].session.workload.statements) == \
+            len(wl.statements)
+        tk2 = fleet.submit_recommend("a", BUDGET)
+        fleet.run_until_drained()
+        fresh = DesignAdvisor(wl, opt).recommend(BUDGET)
+        assert identical(tk2.result(), fresh)
+
+    def test_failed_delta_isolated_to_tenant(self, schema):
+        """An invalid delta resolves ONE ticket with the error; the
+        tenant's workload is unchanged and co-batched tenants are
+        untouched."""
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 2, opt,
+                                fc=FleetConfig(slots=2))
+        bad = fleet.submit_delta(
+            "t0", WorkloadDelta(removed=("no_such_statement",)))
+        ok = fleet.submit_recommend("t1", BUDGET)
+        fleet.run_until_drained()
+        assert isinstance(bad.exception(), KeyError)
+        fresh = DesignAdvisor(wls["t1"], opt).recommend(BUDGET)
+        assert identical(ok.result(), fresh)
+        tk = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        fresh0 = DesignAdvisor(wls["t0"], opt).recommend(BUDGET)
+        assert identical(tk.result(), fresh0)
+
+    def test_duplicate_tenant_rejected(self, schema):
+        fleet = AdvisorFleetService(FleetConfig(slots=1))
+        fleet.register_tenant("a", tenant_workload(schema, "a"))
+        with pytest.raises(ValueError):
+            fleet.register_tenant("a", tenant_workload(schema, "a"))

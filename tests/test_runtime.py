@@ -201,6 +201,12 @@ class TestServeEngine:
         crowded = run_with([[9, 8], [3, 1, 4, 1, 5]])
         assert alone == crowded
 
+    # The interleaved-admission parity suite (mid-flight admission, slot
+    # reuse after retirement, EOS retirement, queue overflow, context
+    # truncation) lives in tests/test_serve_engine.py — a module with no
+    # hypothesis/zstandard imports, so the continuous-batching
+    # regressions run in every environment.
+
 
 class TestDesignAdvisor:
     def test_skyline_pareto(self):

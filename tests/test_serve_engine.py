@@ -1,0 +1,163 @@
+"""Serve-engine continuous-batching regressions (no optional deps).
+
+Pins the slot-isolation invariants the fleet advisor service builds on:
+mid-flight admission must be invisible to in-flight requests (the
+cross-slot KV corruption regression), slots must be reset before reuse,
+and retirement must honor EOS / max_tokens / context overflow.  Kept
+free of hypothesis/zstandard imports so these regressions run in every
+environment (tests/test_runtime.py skips wholesale without them).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.models.rwkv import RWKVConfig
+from repro.serve.engine import (EngineConfig, QueueFull, Request,
+                                ServeEngine)
+
+TINY = ModelConfig("tiny", "dense", 2, 64, 4, 2, 128, 256, d_head=16)
+TINY_RWKV = ModelConfig("tiny-rwkv", "ssm", 2, 64, 4, 4, 128, 256,
+                        d_head=16, mixer="rwkv6",
+                        rwkv=RWKVConfig(head_size=16))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+
+
+class TestMidflightAdmission:
+    def test_midflight_admission_parity(self, params):
+        """THE regression for the cross-slot KV corruption: admitting a
+        request while another slot is mid-decode must not perturb the
+        in-flight slot's outputs.  Pre-fix, `_admit`'s per-token prefill
+        ran `decode_step` without an `active` mask, advancing EVERY
+        slot's position and writing pad-token KV into concurrently
+        decoding slots' caches — this test fails on that engine."""
+
+        def run(midflight):
+            eng = ServeEngine(TINY, params, EngineConfig(batch_slots=2,
+                                                         max_len=64))
+            eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=6))
+            if midflight:
+                eng.step()
+                eng.step()  # uid 0 is now decoding...
+                eng.submit(Request(uid=1, prompt=[9, 8, 4],
+                                   max_new_tokens=6))  # ...admit mid-flight
+            eng.run_until_drained()
+            return eng.finished[0].out_tokens
+
+        assert run(midflight=False) == run(midflight=True)
+
+    def test_midflight_admission_parity_recurrent(self):
+        """Same invariant for a recurrent mixer: inactive slots' mamba/
+        rwkv state must not integrate the pad token (the KV cache is
+        self-healing once positions stop advancing; recurrences are not,
+        so decode_step masks their updates explicitly)."""
+        params = MD.init_params(jax.random.PRNGKey(1), TINY_RWKV,
+                                jnp.float32)
+
+        def run(midflight):
+            eng = ServeEngine(TINY_RWKV, params,
+                              EngineConfig(batch_slots=2, max_len=64))
+            eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=5))
+            if midflight:
+                eng.step()
+                eng.step()
+                eng.submit(Request(uid=1, prompt=[9, 8, 4],
+                                   max_new_tokens=5))
+            eng.run_until_drained()
+            return eng.finished[0].out_tokens
+
+        assert run(midflight=False) == run(midflight=True)
+
+    def test_staggered_admission_and_slot_reuse_parity(self, params):
+        """Continuous-batching invariant: with staggered submits forcing
+        slot reuse after retirement, every request's outputs equal its
+        run-alone outputs (reused slots are reset, prefill is slot-
+        isolated)."""
+        prompts = [[5, 6, 7], [9, 8], [3, 1, 4, 1], [2, 7], [11, 12, 13],
+                   [4, 4]]
+
+        # reference: one engine, one request at a time (drained between)
+        ref = ServeEngine(TINY, params, EngineConfig(batch_slots=2,
+                                                     max_len=64))
+        solo = []
+        for uid, p in enumerate(prompts):
+            ref.submit(Request(uid=uid, prompt=list(p), max_new_tokens=4))
+            ref.run_until_drained()
+            solo.append(ref.finished[uid].out_tokens)
+
+        # staggered: submit one per step so admissions interleave with
+        # decodes and 6 requests churn through 2 slots
+        eng = ServeEngine(TINY, params, EngineConfig(batch_slots=2,
+                                                     max_len=64))
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=list(p), max_new_tokens=4))
+            eng.step()
+        eng.run_until_drained()
+        crowd = [eng.finished[uid].out_tokens for uid in range(len(prompts))]
+        assert solo == crowd
+        # slot_pos is wired to the real per-slot device position
+        assert np.array_equal(np.asarray(eng.state["pos"]), eng.slot_pos)
+
+
+class TestRetirement:
+    def test_eos_retirement(self, params):
+        """step() retires slots on EOS, not only max_tokens."""
+        eng = ServeEngine(TINY, params, EngineConfig(batch_slots=2,
+                                                     max_len=64))
+        eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=8))
+        eng.run_until_drained()
+        free = eng.finished[0].out_tokens
+        assert len(free) == 8
+        eos = free[2]  # pretend the third emitted token is EOS
+        eng2 = ServeEngine(TINY, params, EngineConfig(batch_slots=2,
+                                                      max_len=64,
+                                                      eos_id=eos))
+        eng2.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=8))
+        eng2.run_until_drained()
+        got = eng2.finished[0].out_tokens
+        k = free.index(eos)
+        assert got == free[:k + 1]     # stops AT the first EOS
+        assert eng2.finished[0].done
+        assert not eng2.finished[0].truncated
+
+    def test_context_overflow_truncates(self, params):
+        """A slot whose position reaches max_len retires as truncated
+        instead of silently dropping KV writes off the cache."""
+        eng = ServeEngine(TINY, params, EngineConfig(batch_slots=1,
+                                                     max_len=8))
+        eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=64))
+        eng.run_until_drained()
+        req = eng.finished[0]
+        assert req.done and req.truncated
+        # prefill wrote len(prompt)-1 positions; each decode step writes
+        # one more and emits one token, until the next write would land
+        # at max_len
+        assert len(req.out_tokens) == 8 - (len(req.prompt) - 1)
+
+
+class TestAdmissionControl:
+    def test_queue_overflow(self, params):
+        eng = ServeEngine(TINY, params, EngineConfig(batch_slots=1,
+                                                     max_len=32,
+                                                     max_queue=2))
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+        eng.submit(Request(uid=1, prompt=[3, 4], max_new_tokens=2))
+        with pytest.raises(QueueFull):
+            eng.submit(Request(uid=2, prompt=[5, 6], max_new_tokens=2))
+        eng.step()  # admits uid 0, freeing queue capacity
+        eng.submit(Request(uid=2, prompt=[5, 6], max_new_tokens=2))
+        eng.run_until_drained()
+        assert len(eng.finished) == 3
+
+    def test_oversized_prompt_rejected(self, params):
+        eng = ServeEngine(TINY, params, EngineConfig(batch_slots=1,
+                                                     max_len=32))
+        with pytest.raises(ValueError):
+            eng.submit(Request(uid=9, prompt=list(range(40)),
+                               max_new_tokens=2))
