@@ -6,13 +6,14 @@
 # join synopses / Adaptive-Estimator MV cardinalities (App. B).
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
-from .session import AdvisorSession
+from .session import AdvisorSession, SessionSnapshot
 from .cost_engine import CostEngine, chunked_config_costs
 from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
+from .faults import FaultError, FaultInjector, FaultSpec
 from .planner_engine import PlannerEngine
 from .relation import ColumnDef, IndexDef, Predicate, Table
-from .samplecf import SampleManager, sample_cf
+from .samplecf import EstimateCache, SampleManager, sample_cf
 from .synopses import ForeignKey, MVDef, Schema, SynopsisManager
 from .whatif import Configuration, SizeProvider, WhatIfOptimizer, \
     base_configuration, storage_used
@@ -24,13 +25,15 @@ from .workload_compression import ClusterIndex, CompressedWorkload, \
 
 __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation", "AdvisorSession",
+    "SessionSnapshot",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
     "chunked_config_costs",
     "ClusterIndex", "CompressedWorkload", "compress_workload",
     "EstimationEngine", "batched_sample_cf",
     "EstimationPlanner", "NodeKey", "Plan", "State", "PlannerEngine",
+    "FaultError", "FaultInjector", "FaultSpec",
     "ColumnDef", "IndexDef", "Predicate", "Table",
-    "SampleManager", "sample_cf",
+    "EstimateCache", "SampleManager", "sample_cf",
     "ForeignKey", "MVDef", "Schema", "SynopsisManager",
     "Configuration", "SizeProvider", "WhatIfOptimizer",
     "base_configuration", "storage_used",

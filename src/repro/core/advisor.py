@@ -62,6 +62,12 @@ class AdvisorOptions:
     # advise on <= ~N weighted representatives (workload compression);
     # None disables, and budget >= n_statements is an exact bypass
     compression_budget: Optional[int] = None
+    # --- durability knobs for long-lived sessions (None = unbounded).
+    # All three bound RECOMPUTABLE state, so results stay bit-identical;
+    # see session.AdvisorSession / planner_engine.PlannerEngine.
+    samplecf_cache_entries: Optional[int] = None  # LRU (NodeKey, f) cache
+    max_planner_nodes: Optional[int] = None       # node-universe epoch bound
+    max_replay_entries: Optional[int] = None      # replay-store bound
 
     @staticmethod
     def dta() -> "AdvisorOptions":

@@ -292,17 +292,24 @@ class EstimationEngine:
 
     def __init__(self, tables: Dict[str, Table],
                  manager: Optional[SampleManager] = None,
-                 backend: str = "numpy", seed: int = 0):
+                 backend: str = "numpy", seed: int = 0, faults=None):
         self.tables = dict(tables)
         self.manager = manager if manager is not None else \
             SampleManager(self.tables, seed=seed)
         self.backend = _resolve_backend(backend)
+        # optional faults.FaultInjector; site "estimation" fires a
+        # transient FaultError before any sampling work happens, so a
+        # faulted batch is cleanly retryable
+        self.faults = faults
         self.batch_calls = 0        # per-(table, f) group batches run
         self.targets_estimated = 0  # total targets sized through the engine
 
     def estimate_batch(self, targets: Sequence, f: float,
                        bias_correct: bool = True) -> Dict:
         """SizeEstimate for every target, keyed by the target objects."""
+        if self.faults is not None:
+            self.faults.check("estimation", f"estimate_batch of "
+                              f"{len(targets)} targets at f={f}")
         by_table: Dict[str, List] = {}
         for t in targets:
             by_table.setdefault(t.table, []).append(t)

@@ -208,12 +208,19 @@ class EstimationPlanner:
     def __init__(self, tables: Dict[str, Table],
                  existing: Optional[Dict[NodeKey, float]] = None,
                  backend: str = "numpy", use_engine: bool = True,
-                 record: bool = True):
+                 record: bool = True, max_nodes: Optional[int] = None,
+                 max_replay: Optional[int] = None, faults=None):
         self.tables = tables
         self.existing = dict(existing or {})
         self.backend = backend
         self.use_engine = use_engine
         self.record = record   # False: skip cross-run replay bookkeeping
+        # durability knobs, forwarded to the lazily-built PlannerEngine:
+        # epoch bounds on the node universe / replay store, and the
+        # seeded fault injector (site "planner_replay")
+        self.max_nodes = max_nodes
+        self.max_replay = max_replay
+        self.faults = faults
         self._engine = None
         self._scost: Dict[Tuple[str, Tuple[str, ...], float], float] = {}
 
@@ -226,7 +233,10 @@ class EstimationPlanner:
             self._engine = PlannerEngine(self.tables, self.existing,
                                          backend=self.backend,
                                          scost_memo=self._scost,
-                                         record=self.record)
+                                         record=self.record,
+                                         max_nodes=self.max_nodes,
+                                         max_replay=self.max_replay,
+                                         faults=self.faults)
         return self._engine
 
     def _sampling_cost(self, key: NodeKey, f: float) -> float:
@@ -541,14 +551,27 @@ class EstimationPlanner:
         only cache misses are estimated (batched by default, or via the
         scalar `sample_cf` reference with `scalar=True`); deductions are
         re-resolved from the plan each call.  Returns estimates identical
-        to a fresh `execute`/`execute_scalar` on the same plan."""
+        to a fresh `execute`/`execute_scalar` on the same plan.
+
+        The plan is resolved from a LOCAL snapshot of this call's
+        estimates, never back through `cache`: with a bounded cache
+        (`samplecf.EstimateCache`) an insert may evict an entry this
+        same plan still needs, and a smaller-than-the-plan cache must
+        degrade to recomputation, not KeyError."""
         sampled = [k for k, n in plan.nodes.items()
                    if n.state is State.SAMPLED]
-        missing = [k for k in sampled if (k, plan.f) not in cache]
+        local: Dict[NodeKey, SizeEstimate] = {}
+        missing = []
+        for k in sampled:
+            est = cache.get((k, plan.f))
+            if est is None:
+                missing.append(k)
+            else:
+                local[k] = est
         if missing:
             if scalar:
                 for k in missing:
-                    cache[(k, plan.f)] = sample_cf(
+                    local[k] = cache[(k, plan.f)] = sample_cf(
                         manager, IndexDef(k.table, k.cols, k.method),
                         plan.f)
             else:
@@ -558,8 +581,8 @@ class EstimationPlanner:
                     "engine.manager must be the manager passed in"
                 for k, est in engine.estimate_batch(missing,
                                                     plan.f).items():
-                    cache[(k, plan.f)] = est
-        return self._resolve_plan(plan, lambda k: cache[(k, plan.f)])
+                    local[k] = cache[(k, plan.f)] = est
+        return self._resolve_plan(plan, local.__getitem__)
 
     def _resolve_plan(self, plan: Plan, sampled_est
                       ) -> Dict[NodeKey, SizeEstimate]:

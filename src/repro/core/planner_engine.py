@@ -193,7 +193,9 @@ class PlannerEngine:
 
     def __init__(self, tables: Dict, existing: Optional[Dict] = None,
                  backend: str = "numpy",
-                 scost_memo: Optional[Dict] = None, record: bool = True):
+                 scost_memo: Optional[Dict] = None, record: bool = True,
+                 max_nodes: Optional[int] = None,
+                 max_replay: Optional[int] = None, faults=None):
         if backend not in ("numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "jax" and not (HAVE_JAX and jax_batch_ready()):
@@ -203,6 +205,18 @@ class PlannerEngine:
         # session regime).  One-shot throwaway engines pass record=False
         # and skip the bookkeeping entirely.
         self.record = record
+        # durability bounds for long-lived engines: when the node
+        # universe outgrows `max_nodes` the whole id space is reset (an
+        # EPOCH eviction — cached records/replays/cost columns reference
+        # node ids, so they are dropped together and rebuilt on demand,
+        # bit-identically); when the replay store holds more than
+        # `max_replay` per-target decision records it is cleared.  Both
+        # discard only recomputable state.  `faults` is an optional
+        # faults.FaultInjector; site "planner_replay" models replay-store
+        # loss (drop + recompute, never wrong results).
+        self.max_nodes = max_nodes
+        self.max_replay = max_replay
+        self.faults = faults
         self.tables = tables
         self.existing = dict(existing or {})
         self._graphs: Dict[Tuple[NodeKey, ...], _Graph] = {}
@@ -244,6 +258,10 @@ class PlannerEngine:
         self.replay_hits = 0      # per-(target) decisions replayed in _run
         self.replay_verified = 0  # ... replayed after appended-mate checks
         self.replay_misses = 0    # ... recomputed (inputs really changed)
+        self.universe_evictions = 0  # epoch resets of the node universe
+        self.replay_evictions = 0    # replay stores dropped at max_replay
+        self.replay_faults = 0       # ... dropped by injected faults
+        self.peak_nodes = 0          # high-water mark of the universe
 
     # ------------------------------------------------------------------
     # Graph construction (f-independent; incremental over a shared
@@ -369,7 +387,31 @@ class PlannerEngine:
         return _Graph(self._node_keys, self._node_id,
                       list(self._exact), recs)
 
+    def _evict_universe(self) -> None:
+        """EPOCH eviction: reset the node universe and everything keyed
+        by (or holding) node ids — cached target records, mate groups,
+        ColExt blocks, built graphs, grown cost columns, replay stores.
+        The §5.1 sampling-cost memo (keyed by (table, cols, f)) and the
+        probability memo (keyed by floats) survive: they are id-free.
+        Every dropped structure is a pure function of the next round's
+        targets, so the rebuild is bit-identical — eviction trades CPU
+        for a bounded footprint, never results."""
+        self._graphs.clear()
+        self._recs.clear()
+        self._groups.clear()
+        self._colext.clear()
+        self._scost_cols.clear()
+        self._replay.clear()
+        self._node_keys = []
+        self._node_id = {}
+        self._exact = [(self._add_node(k), k, size)
+                       for k, size in self.existing.items()]
+        self.universe_evictions += 1
+
     def _graph(self, targets: Sequence[NodeKey]) -> _Graph:
+        if self.max_nodes is not None and \
+                len(self._node_keys) > self.max_nodes:
+            self._evict_universe()
         key = tuple(targets)
         g = self._graphs.get(key)
         if g is None:
@@ -377,6 +419,7 @@ class PlannerEngine:
                 self._graphs.clear()
             g = self._graphs[key] = self._build_graph(targets)
             self.graph_builds += 1
+        self.peak_nodes = max(self.peak_nodes, len(self._node_keys))
         return g
 
     def _sampling_cost(self, key: NodeKey, f: float) -> float:
@@ -713,6 +756,18 @@ class PlannerEngine:
         """
         self.batch_runs += 1
         f_grid = tuple(f_grid)
+        if self.record:
+            if self.faults is not None and \
+                    self.faults.fires("planner_replay"):
+                # injected replay-store loss: every decision recomputes
+                # from scratch next, which is bit-identical by contract
+                if self._replay:
+                    self._replay.clear()
+                    self.replay_faults += 1
+            if self.max_replay is not None and sum(
+                    len(d) for d in self._replay.values()) > self.max_replay:
+                self._replay.clear()
+                self.replay_evictions += 1
         g = self._graph(targets)
         nf = len(f_grid)
         n = len(g.node_keys)

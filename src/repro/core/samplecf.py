@@ -13,7 +13,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import zlib
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterator, MutableMapping, Optional, Tuple
 
 import numpy as np
 
@@ -66,6 +67,80 @@ class SizeEstimate:
     method: str            # "samplecf" | "deduction:..." | "exact"
     cost_pages: float      # estimation cost charged (paper §5.1)
     cf: float              # estimated compression fraction
+
+
+class EstimateCache(MutableMapping):
+    """Bounded LRU (NodeKey, f) -> `SizeEstimate` mapping.
+
+    Drop-in for the plain dict `AdvisorSession(sampled_cache=...)` /
+    the fleet share groups use: same mapping protocol, but capped at
+    `maxsize` entries with least-recently-USED eviction (`get` and
+    `__getitem__` refresh recency; `__contains__` is a pure peek so
+    membership scans don't distort the LRU order).
+
+    Eviction is SAFE for the exact-parity contract: every entry is a
+    pure function of (schema content, sample seed, NodeKey, f) over the
+    order-independent `SampleManager`, so an evicted entry is simply
+    recomputed bit-identically on the next miss.  Hit/miss/eviction
+    counters are exposed for `stats()`.
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError("EstimateCache maxsize must be >= 1")
+        self.maxsize = int(maxsize)
+        self._d: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __getitem__(self, key):
+        v = self._d[key]           # KeyError propagates on a miss
+        self._d.move_to_end(key)
+        self.hits += 1
+        return v
+
+    def get(self, key, default=None):
+        try:
+            v = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._d.move_to_end(key)
+        self.hits += 1
+        return v
+
+    def __setitem__(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __delitem__(self, key) -> None:
+        del self._d[key]
+
+    def __contains__(self, key) -> bool:
+        # pure membership: no recency touch, no counter — callers use it
+        # to SCAN (miss counting, prefetch dedup) without perturbing LRU
+        return key in self._d
+
+    def __iter__(self) -> Iterator:
+        return iter(self._d)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def items(self):
+        # pure peek, like __contains__: snapshotting the cache (session
+        # checkpoints) must neither count hits nor touch recency — and
+        # the MutableMapping default would move_to_end mid-iteration
+        return list(self._d.items())
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._d), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
 
 
 class SampleManager:

@@ -37,6 +37,7 @@ approximate.
 from __future__ import annotations
 
 import dataclasses
+import pickle
 import time
 from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple, Union
 
@@ -45,9 +46,10 @@ from .advisor import (AdvisorOptions, DesignAdvisor, Recommendation,
                       enumerate_pool, pool_with_merged, select_candidates)
 from .cost_engine import CostEngine
 from .estimation_engine import EstimationEngine
-from .estimation_graph import EstimationPlanner, NodeKey, Plan
+from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
+from .faults import FaultInjector
 from .relation import IndexDef
-from .samplecf import SampleManager, SizeEstimate
+from .samplecf import EstimateCache, SampleManager, SizeEstimate
 from .whatif import SizeProvider, WhatIfOptimizer, base_configuration
 from .workload import Query, Statement, Workload, WorkloadDelta
 from .workload_compression import ClusterIndex, CompressedWorkload
@@ -68,6 +70,39 @@ class _Selection:
     n_costed: int
 
 
+@dataclasses.dataclass
+class SessionSnapshot:
+    """Self-contained checkpoint of an `AdvisorSession`.
+
+    Captures exactly the state the parity contract depends on — the
+    workload (schema + statements), the options, the retired-name set,
+    and the monotone workload version — plus the warm (NodeKey, f)
+    SampleCF estimates (pure in (schema content, sample seed, NodeKey,
+    f), so carrying them is a pure optimization).  Everything else a
+    session holds (cost matrices, planner records, cluster index,
+    selections) is derivable from these and is rebuilt lazily by the
+    restored session; `AdvisorSession.restore(snapshot)` therefore
+    recommends exactly `==` a fresh `DesignAdvisor` on the snapshot
+    workload.  `to_bytes`/`from_bytes` give a durable serialized form
+    (the fleet's crash-recovery path round-trips through it in tests).
+    """
+    workload: Workload
+    options: AdvisorOptions
+    workload_version: int
+    retired: frozenset
+    estimates: Dict[Tuple[NodeKey, float], SizeEstimate]
+
+    def to_bytes(self) -> bytes:
+        return pickle.dumps(self)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "SessionSnapshot":
+        snap = pickle.loads(data)
+        if not isinstance(snap, SessionSnapshot):
+            raise TypeError(f"not a SessionSnapshot: {type(snap)!r}")
+        return snap
+
+
 class AdvisorSession:
     """A persistent, delta-aware `DesignAdvisor`.
 
@@ -85,12 +120,19 @@ class AdvisorSession:
                  options: Optional[AdvisorOptions] = None,
                  samples: Optional[SampleManager] = None,
                  sampled_cache: Optional[Dict[Tuple[NodeKey, float],
-                                              SizeEstimate]] = None):
+                                              SizeEstimate]] = None,
+                 faults: Optional[FaultInjector] = None):
         workload.by_name()                  # validates name uniqueness
         self.schema = workload.schema
         self.workload = Workload(schema=workload.schema,
                                  statements=list(workload.statements))
         self.opt = options or AdvisorOptions()
+        # seeded fault injector (faults.FaultInjector) or None; sites
+        # "apply_delta" / "estimation" / "costing" fire HERE (each before
+        # any state mutation, so a faulted call is cleanly retryable and
+        # the retry is bit-identical), "planner_replay" inside the
+        # threaded PlannerEngine
+        self.faults = faults
         # SampleManager draws are per-(table, fraction) seed-derived and
         # order-independent, so an outer compressed session can hand its
         # manager to successive inner sessions without changing estimates
@@ -119,7 +161,7 @@ class AdvisorSession:
             self._inner_comp: Optional[CompressedWorkload] = None
             self._pending: List[WorkloadDelta] = []
             self._est_cache: Dict[Tuple[NodeKey, float], SizeEstimate] = (
-                sampled_cache if sampled_cache is not None else {})
+                self._new_sampled_cache(sampled_cache))
             self._retired: Set[str] = set()
             self.rounds = 0
             self.compression_rebuilds = 0
@@ -130,7 +172,9 @@ class AdvisorSession:
         self.optimizer = WhatIfOptimizer(self.workload, self.sizes)
         self.planner = EstimationPlanner(
             self.schema.tables, backend=self.opt.planner_backend,
-            use_engine=self.opt.use_batched_planner)
+            use_engine=self.opt.use_batched_planner,
+            max_nodes=self.opt.max_planner_nodes,
+            max_replay=self.opt.max_replay_entries, faults=faults)
         self.engine: Optional[CostEngine] = (
             CostEngine(self.workload, self.sizes,
                        backend=self.opt.engine_backend)
@@ -143,7 +187,7 @@ class AdvisorSession:
         self._queries: Dict[str, _QueryEntry] = {}
         self._selections: Dict[str, _Selection] = {}
         self._sampled_est: Dict[Tuple[NodeKey, float], SizeEstimate] = (
-            sampled_cache if sampled_cache is not None else {})
+            self._new_sampled_cache(sampled_cache))
         self._registered: Dict[NodeKey, float] = {}
         # raw candidate key -> [(interned NodeKey, compressed variant)]:
         # reusing the SAME NodeKey objects across rounds turns the
@@ -159,6 +203,66 @@ class AdvisorSession:
         self.selection_hits = 0
         self.selection_misses = 0
 
+    def _new_sampled_cache(self, sampled_cache):
+        """The session's (NodeKey, f) SampleCF cache: the caller's shared
+        mapping when given (the fleet's share-group cache — possibly
+        already a bounded `EstimateCache`), else a bounded LRU when
+        `samplecf_cache_entries` asks for one, else a plain dict."""
+        if sampled_cache is not None:
+            return sampled_cache
+        if self.opt.samplecf_cache_entries is not None:
+            return EstimateCache(self.opt.samplecf_cache_entries)
+        return {}
+
+    # ------------------------------------------------------------------
+    # Checkpoint / restore
+    # ------------------------------------------------------------------
+    def snapshot(self, include_estimates: bool = True) -> SessionSnapshot:
+        """Checkpoint the session (cheap: copies the statement list, the
+        retired-name set and the warm estimate cache; engines are NOT
+        serialized — they are pure in the workload and rebuilt lazily by
+        `restore`).  Pass `include_estimates=False` when the estimate
+        cache outlives the session anyway (the fleet's share-group cache)
+        — estimates are pure in (NodeKey, f), so a cold cache changes
+        nothing but recomputation time."""
+        est = self._est_cache if self._compressed_mode else self._sampled_est
+        return SessionSnapshot(
+            workload=Workload(schema=self.schema,
+                              statements=list(self.workload.statements)),
+            options=self.opt,
+            workload_version=self.workload_version,
+            retired=frozenset(self._retired),
+            estimates=dict(est.items()) if include_estimates else {})
+
+    @classmethod
+    def restore(cls, snap: SessionSnapshot,
+                samples: Optional[SampleManager] = None,
+                sampled_cache: Optional[Dict[Tuple[NodeKey, float],
+                                             SizeEstimate]] = None,
+                faults: Optional[FaultInjector] = None) -> "AdvisorSession":
+        """Rebuild a session from a checkpoint.
+
+        The restored session's next `recommend` is exactly `==` a fresh
+        `DesignAdvisor` on the snapshot workload: the constructor
+        rebuilds every engine from the workload (including the cluster
+        index via `ClusterIndex.from_workload`, which PR 5 pinned as
+        `==` the incrementally-maintained one), and the transplanted
+        estimates are pure in (NodeKey, f), so warming the cache cannot
+        change any value — only skip recomputation.  `samples` /
+        `sampled_cache` re-attach fleet share-group state; the snapshot
+        estimates are merged into the shared cache, never replacing it.
+        """
+        sess = cls(snap.workload, snap.options, samples=samples,
+                   sampled_cache=sampled_cache, faults=faults)
+        cache = (sess._est_cache if sess._compressed_mode
+                 else sess._sampled_est)
+        for k, v in snap.estimates.items():
+            if k not in cache:
+                cache[k] = v
+        sess.workload_version = snap.workload_version
+        sess._retired = set(snap.retired)
+        return sess
+
     # ------------------------------------------------------------------
     # Delta API
     # ------------------------------------------------------------------
@@ -167,6 +271,10 @@ class AdvisorSession:
         long-lived engine.  Statement names are stable ids: a removed
         name is retired for the session's lifetime (re-adding it could
         silently alias cached candidates of the old statement)."""
+        if self.faults is not None:
+            # before ANY validation or mutation: a faulted apply leaves
+            # the session untouched, so the caller can simply retry it
+            self.faults.check("apply_delta")
         for s in delta.added:
             if s.name in self._retired:
                 raise ValueError(
@@ -332,11 +440,18 @@ class AdvisorSession:
         changed: Set[Tuple] = set()
         if plan is None:
             return 0.0, None, 0, 0, changed
-        before = len(self._sampled_est)
+        if self.faults is not None:
+            # before execute_cached touches the cache: a faulted
+            # estimation leaves all caches consistent for the retry
+            self.faults.check("estimation")
+        # count misses by membership, not by cache growth: a bounded
+        # EstimateCache may evict while inserting, keeping len() flat
+        misses = sum(1 for k, n in plan.nodes.items()
+                     if n.state is State.SAMPLED
+                     and (k, plan.f) not in self._sampled_est)
         ests = self.planner.execute_cached(
             plan, self.samples, self._sampled_est, engine=self.est_engine,
             scalar=not self.opt.use_batched_estimation)
-        misses = len(self._sampled_est) - before
         self.samplecf_cache_misses += misses
         self.samplecf_cache_hits += plan.n_sampled() - misses
         for k, est in ests.items():
@@ -361,7 +476,7 @@ class AdvisorSession:
         so transplanting them across rebuilds cannot change any estimate
         (the PR-4 property the incremental engines already rely on)."""
         inner = AdvisorSession(workload, self._inner_options(),
-                               samples=self.samples)
+                               samples=self.samples, faults=self.faults)
         self._est_cache.update(inner._sampled_est)
         inner._sampled_est = self._est_cache
         self.compression_rebuilds += 1
@@ -388,8 +503,16 @@ class AdvisorSession:
             if self._inner is None or self._inner_comp is not None:
                 self._inner = self._make_inner(self.workload)
             else:
-                for d in self._pending:
-                    self._inner.apply(d)
+                # internal catch-up, not a user-facing apply: suppress
+                # the "apply_delta" fault site so a mid-loop fault can
+                # never leave the pending list half-applied (the outer
+                # apply() already took its fault check for each delta)
+                inner_faults, self._inner.faults = self._inner.faults, None
+                try:
+                    for d in self._pending:
+                        self._inner.apply(d)
+                finally:
+                    self._inner.faults = inner_faults
             self._inner_comp = None
             self._pending.clear()
             self.compression_bypasses += 1
@@ -443,6 +566,10 @@ class AdvisorSession:
         est_cost, plan, n_s, n_d, changed = self._estimate_sizes(
             raw_union, planned)
 
+        if self.faults is not None:
+            # size registration above is idempotent, so a fault here is
+            # retryable and the retry recommends bit-identically
+            self.faults.check("costing")
         engine = self.engine
         if engine is not None:
             engine.sync_sizes()
@@ -508,6 +635,9 @@ class AdvisorSession:
             "samplecf_cache_misses": self.samplecf_cache_misses,
             "sampled_estimates_cached": len(self._sampled_est),
         }
+        if isinstance(self._sampled_est, EstimateCache):
+            out.update(samplecf_cache_evictions=self._sampled_est.evictions,
+                       samplecf_cache_maxsize=self._sampled_est.maxsize)
         if self.engine is not None:
             out.update(engine_rows_added=self.engine.rows_added,
                        engine_rows_removed=self.engine.rows_removed,
@@ -519,5 +649,12 @@ class AdvisorSession:
                        rec_hits=peng.rec_hits,
                        replay_hits=peng.replay_hits,
                        replay_verified=peng.replay_verified,
-                       replay_misses=peng.replay_misses)
+                       replay_misses=peng.replay_misses,
+                       universe_nodes=len(peng._node_keys),
+                       universe_peak_nodes=peng.peak_nodes,
+                       universe_evictions=peng.universe_evictions,
+                       replay_entries=sum(len(d) for d in
+                                          peng._replay.values()),
+                       replay_evictions=peng.replay_evictions,
+                       replay_faults=peng.replay_faults)
         return out

@@ -19,9 +19,12 @@ advisors:
   Sample draws are seed-derived and order-independent (PR 4), which
   makes the sharing invisible to any single tenant.
 * **Shared SampleCF cache** — each group owns one (NodeKey, f) ->
-  `SizeEstimate` dict handed to every member session
+  `SizeEstimate` mapping handed to every member session
   (`AdvisorSession(sampled_cache=...)`): an index variant sized for one
   tenant is a cache hit for every other tenant on the same schema.
+  With `FleetConfig.cache_entries` the mapping is a bounded LRU
+  (`samplecf.EstimateCache`) — eviction only discards recomputable
+  state, so long-lived fleets stay bounded without losing parity.
 * **Cross-tenant batched prefetch** — before executing a step's slots,
   the service peeks every admitted recommend's estimation plan
   (`AdvisorSession.peek_estimation_plan`, memoized so the peek is free
@@ -34,11 +37,39 @@ advisors:
   independent of WHICH tenants' targets share a batch — union-batching
   is bit-exact.
 
+Durability (the fleet's failure surface, driven by a seeded
+`faults.FaultInjector` in tests and benchmarks/fault_recovery.py):
+
+* **Deadlines** — every request carries a deadline in service STEPS
+  (never wall-clock, so schedules are deterministic); an expired queued
+  request resolves with `TicketTimeout`, except a recommend at the
+  head of its tenant's FIFO when `degraded_budget` is set: that one
+  DEGRADES instead — it runs immediately at the smaller workload-
+  compression budget and returns a `Recommendation` carrying the PR 5
+  error certificate (`ticket.degraded` is True) rather than failing.
+* **Retries** — a request failing with a transient `FaultError` is
+  requeued at the front of the queue (preserving its tenant's FIFO)
+  with a deterministic step-based backoff (`retry_backoff`); retries
+  are bit-exact because every faulted call fails BEFORE mutating
+  session state.
+* **Circuit breaker + checkpoint restore** — `quarantine_after`
+  consecutive final failures quarantine the tenant: its session is
+  dropped, queued tickets resolve with `TenantQuarantined`, submits are
+  rejected.  After `quarantine_steps` (or `readmit_tenant`) the tenant
+  is restored from its last checkpoint (`AdvisorSession.restore`; a
+  snapshot is taken after every successful delta, so the checkpoint
+  always equals the tenant's current workload) and its next
+  recommendation is exactly `==` a fresh `DesignAdvisor` — the parity
+  contract extended to crash recovery.  `crash_tenant` simulates
+  process loss for tests/benchmarks.
+
 Correctness contract (asserted in tests/test_fleet_service.py and every
-round of benchmarks/fleet_scaling.py): after any interleaved sequence of
-per-tenant deltas and recommends, each tenant's recommendation is
-exactly `==` — config, cost, used_bytes — a fresh `DesignAdvisor` built
-on that tenant's current workload.
+round of benchmarks/fleet_scaling.py + fault_recovery.py): after any
+interleaved sequence of per-tenant deltas and recommends — including
+injected faults, evictions, timeouts and crash/restore cycles — each
+tenant's successful recommendation is exactly `==` — config, cost,
+used_bytes — a fresh `DesignAdvisor` built on that tenant's current
+workload.
 
 Budget isolation: every tenant carries a `TenantBudget` — a workload
 size cap enforced before any delta is applied, a pending-request cap
@@ -53,19 +84,50 @@ from __future__ import annotations
 import dataclasses
 import time
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Dict, List, Optional, Tuple
 
 from ..core.advisor import AdvisorOptions
 from ..core.estimation_engine import EstimationEngine
 from ..core.estimation_graph import NodeKey, State
-from ..core.samplecf import SampleManager, SizeEstimate, schema_fingerprint
-from ..core.session import AdvisorSession
+from ..core.faults import FaultError, FaultInjector
+from ..core.samplecf import (EstimateCache, SampleManager, SizeEstimate,
+                             schema_fingerprint)
+from ..core.session import AdvisorSession, SessionSnapshot
 from ..core.workload import Workload, WorkloadDelta
 from .engine import QueueFull
 
 
 class TenantBudgetExceeded(RuntimeError):
     """A delta would grow a tenant's workload past its budget cap."""
+
+
+class TicketTimeout(RuntimeError):
+    """A request exceeded its deadline (service steps) or a ticket's
+    `result()` wait exceeded its wall-clock timeout."""
+
+
+class TenantQuarantined(RuntimeError):
+    """The tenant is quarantined by the circuit breaker: queued tickets
+    resolve with this, and new submits are rejected until readmission."""
+
+
+class SessionLost(RuntimeError):
+    """The tenant's session is gone (crashed) and not yet restored."""
+
+
+class DrainStalled(RuntimeError):
+    """`run_until_drained` hit its step budget with work still queued.
+
+    Carries `queued` (total undrained requests) and `pending_by_tenant`
+    (tenant id -> queued request count) so callers can see WHO is stuck
+    instead of silently losing work."""
+
+    def __init__(self, msg: str, queued: int,
+                 pending_by_tenant: Dict[str, int]):
+        super().__init__(msg)
+        self.queued = queued
+        self.pending_by_tenant = dict(pending_by_tenant)
 
 
 @dataclasses.dataclass
@@ -90,6 +152,13 @@ class FleetConfig:
     max_queue: Optional[int] = None   # global bound; submit raises QueueFull
     prefetch: bool = True             # cross-tenant batched SampleCF prefetch
     backend: str = "numpy"            # prefetch engine backend
+    # --- durability ---------------------------------------------------
+    cache_entries: Optional[int] = None   # bound each group's SampleCF cache
+    deadline_steps: Optional[int] = None  # default per-request deadline
+    retry_backoff: Tuple[int, ...] = (1, 2, 4)  # step delays; len = retries
+    quarantine_after: Optional[int] = 3   # consecutive final failures
+    quarantine_steps: Optional[int] = None  # auto-readmit cooldown (steps)
+    degraded_budget: Optional[int] = None  # deadline-pressure fallback
 
 
 class FleetTicket:
@@ -97,24 +166,48 @@ class FleetTicket:
 
     `result()` blocks until the service loop retires the request; for a
     recommend it returns the `Recommendation`, for a delta a small
-    summary dict.  Failures (invalid delta, `TenantBudgetExceeded`)
-    surface through `exception()` / a raising `result()`."""
+    summary dict.  Failures (invalid delta, `TenantBudgetExceeded`,
+    `TicketTimeout`, `TenantQuarantined`) surface through
+    `exception()` / a raising `result()`.  `result()` defaults to a
+    `DEFAULT_TIMEOUT`-second deadline so a stopped service loop shows
+    up as a clear `TicketTimeout` naming the tenant and request kind,
+    not a forever-blocked caller; pass an explicit timeout (or None
+    via `result(timeout=float("inf"))`) to override."""
+
+    DEFAULT_TIMEOUT: float = 300.0
 
     def __init__(self, tenant_id: str, kind: str):
         self.tenant_id = tenant_id
         self.kind = kind              # "delta" | "recommend"
         self.submitted_at = time.perf_counter()
         self.resolved_at: Optional[float] = None
+        self.degraded = False         # resolved via the degraded path
+        self.attempts = 0             # execution attempts (retries + 1)
+        self.prefetch_error: Optional[BaseException] = None
         self._future: Future = Future()
 
     def done(self) -> bool:
         return self._future.done()
 
     def result(self, timeout: Optional[float] = None):
-        return self._future.result(timeout)
+        t = self.DEFAULT_TIMEOUT if timeout is None else timeout
+        try:
+            return self._future.result(t)
+        except FutureTimeout:
+            raise TicketTimeout(
+                f"tenant {self.tenant_id!r} {self.kind} ticket unresolved "
+                f"after {t}s — is the service loop (step() / "
+                f"run_until_drained()) still running?") from None
 
     def exception(self, timeout: Optional[float] = None):
-        return self._future.exception(timeout)
+        t = self.DEFAULT_TIMEOUT if timeout is None else timeout
+        try:
+            return self._future.exception(t)
+        except FutureTimeout:
+            raise TicketTimeout(
+                f"tenant {self.tenant_id!r} {self.kind} ticket unresolved "
+                f"after {t}s — is the service loop (step() / "
+                f"run_until_drained()) still running?") from None
 
     @property
     def latency(self) -> Optional[float]:
@@ -139,19 +232,26 @@ class _FleetRequest:
     ticket: FleetTicket
     delta: Optional[WorkloadDelta] = None
     budget_bytes: Optional[float] = None
+    submitted_step: int = 0               # service step at submit
+    deadline_steps: Optional[int] = None  # None: no deadline
+    attempts: int = 0                     # failed transient attempts so far
+    not_before: int = 0                   # retry backoff: earliest step
 
 
 class _ShareGroup:
     """One (schema fingerprint, backend) equivalence class of tenants:
     a shared order-independent SampleManager, a shared (NodeKey, f)
-    SampleCF cache, and the batched estimation engine the prefetch
-    stacks the group's targets into."""
+    SampleCF cache (bounded LRU when the fleet config asks), and the
+    batched estimation engine the prefetch stacks the group's targets
+    into."""
 
     def __init__(self, key: Tuple[str, str], tables: Dict, seed: int,
-                 backend: str):
+                 backend: str, cache_entries: Optional[int] = None):
         self.key = key
         self.samples = SampleManager(tables, seed=seed)
-        self.cache: Dict[Tuple[NodeKey, float], SizeEstimate] = {}
+        self.cache: Dict[Tuple[NodeKey, float], SizeEstimate] = (
+            EstimateCache(cache_entries) if cache_entries is not None
+            else {})
         self.engine = EstimationEngine(tables, self.samples,
                                        backend=backend)
         self.n_tenants = 0
@@ -160,13 +260,18 @@ class _ShareGroup:
 @dataclasses.dataclass
 class _Tenant:
     tenant_id: str
-    session: AdvisorSession
+    session: Optional[AdvisorSession]
     budget: TenantBudget
     group: _ShareGroup
+    snapshot: Optional[SessionSnapshot] = None  # last good checkpoint
     in_flight: Optional[_FleetRequest] = None
     n_pending: int = 0                # queued + in-flight requests
     deltas_applied: int = 0
     recommends: int = 0
+    consecutive_failures: int = 0     # final (post-retry) failures in a row
+    quarantined_at: Optional[int] = None  # step of quarantine, None: healthy
+    quarantines: int = 0
+    restores: int = 0
 
 
 class AdvisorFleetService:
@@ -184,10 +289,15 @@ class AdvisorFleetService:
         rec = t.result()          # == fresh DesignAdvisor on t0's workload
     """
 
-    def __init__(self, fc: Optional[FleetConfig] = None):
+    def __init__(self, fc: Optional[FleetConfig] = None,
+                 faults: Optional[FaultInjector] = None):
         self.fc = fc or FleetConfig()
         if self.fc.slots < 1:
             raise ValueError("need at least one slot")
+        # one injector threads the whole stack: sessions check
+        # "apply_delta"/"estimation"/"costing" (and their planners
+        # "planner_replay"); the service itself checks "prefetch"
+        self.faults = faults
         self.tenants: Dict[str, _Tenant] = {}
         self.groups: Dict[Tuple[str, str], _ShareGroup] = {}
         self.queue: List[_FleetRequest] = []          # global arrival order
@@ -197,6 +307,14 @@ class AdvisorFleetService:
         self.prefetch_batches = 0     # (group, f) batched prefetch calls
         self.prefetch_targets = 0     # targets sized by the prefetch
         self.prefetch_hits = 0        # peeked targets already cached
+        self.prefetch_failures = 0    # peeks/batches that raised
+        self.retries = 0              # transient failures requeued
+        self.timeouts = 0             # requests expired by their deadline
+        self.degraded_recommends = 0  # deadline recommends served degraded
+        self.failures = 0             # final (post-retry) request failures
+        self.quarantines = 0
+        self.restores = 0
+        self.restore_seconds: List[float] = []  # per-restore wall time
 
     # ------------------------------------------------------------------
     # Tenants
@@ -223,17 +341,60 @@ class AdvisorFleetService:
         if group is None:
             group = self.groups[key] = _ShareGroup(
                 key, workload.schema.tables, opt.sample_seed,
-                self.fc.backend)
+                self.fc.backend, self.fc.cache_entries)
         group.n_tenants += 1
         session = AdvisorSession(workload, opt, samples=group.samples,
-                                 sampled_cache=group.cache)
-        self.tenants[tenant_id] = _Tenant(tenant_id, session, budget, group)
+                                 sampled_cache=group.cache,
+                                 faults=self.faults)
+        t = _Tenant(tenant_id, session, budget, group)
+        # checkpoint from birth: a tenant crashing before its first
+        # successful delta still restores to its registered workload.
+        # Estimates are excluded — restore re-attaches the share-group
+        # cache, which survives the session (copying it per tenant per
+        # checkpoint would duplicate the whole shared cache).
+        t.snapshot = session.snapshot(include_estimates=False)
+        self.tenants[tenant_id] = t
+
+    def crash_tenant(self, tenant_id: str) -> None:
+        """Simulate process loss of one tenant's session: the session is
+        dropped and the tenant quarantined (queued tickets resolve with
+        `TenantQuarantined`).  Recovery is the normal readmission path —
+        checkpoint restore via `readmit_tenant` or the
+        `quarantine_steps` cooldown."""
+        t = self.tenants[tenant_id]
+        if t.quarantined_at is None:
+            self._quarantine(t, "session crashed (injected)")
+
+    def readmit_tenant(self, tenant_id: str) -> None:
+        """Restore a quarantined tenant from its last checkpoint.  The
+        restored session re-attaches the share group's SampleManager and
+        SampleCF cache; its next recommendation is exactly `==` a fresh
+        `DesignAdvisor` on the checkpoint workload."""
+        t = self.tenants[tenant_id]
+        if t.quarantined_at is None:
+            raise ValueError(f"tenant {tenant_id!r} is not quarantined")
+        assert t.snapshot is not None
+        t0 = time.perf_counter()
+        t.session = AdvisorSession.restore(
+            t.snapshot, samples=t.group.samples,
+            sampled_cache=t.group.cache, faults=self.faults)
+        self.restore_seconds.append(time.perf_counter() - t0)
+        t.quarantined_at = None
+        t.consecutive_failures = 0
+        t.restores += 1
+        self.restores += 1
 
     # ------------------------------------------------------------------
     # Submission (admission control)
     # ------------------------------------------------------------------
-    def _submit(self, req: _FleetRequest) -> FleetTicket:
+    def _submit(self, req: _FleetRequest,
+                deadline_steps: Optional[int]) -> FleetTicket:
         t = self.tenants[req.tenant_id]
+        if t.quarantined_at is not None:
+            raise TenantQuarantined(
+                f"tenant {req.tenant_id!r} is quarantined (since step "
+                f"{t.quarantined_at}); readmit_tenant() or wait for the "
+                "cooldown")
         if self.fc.max_queue is not None and \
                 len(self.queue) >= self.fc.max_queue:
             raise QueueFull(
@@ -243,21 +404,25 @@ class AdvisorFleetService:
             raise QueueFull(
                 f"tenant {req.tenant_id!r} at max_pending="
                 f"{t.budget.max_pending}")
+        req.submitted_step = self.steps
+        req.deadline_steps = (deadline_steps if deadline_steps is not None
+                              else self.fc.deadline_steps)
         t.n_pending += 1
         self.queue.append(req)
         return req.ticket
 
-    def submit_delta(self, tenant_id: str,
-                     delta: WorkloadDelta) -> FleetTicket:
+    def submit_delta(self, tenant_id: str, delta: WorkloadDelta,
+                     deadline_steps: Optional[int] = None) -> FleetTicket:
         return self._submit(_FleetRequest(
             tenant_id, "delta", FleetTicket(tenant_id, "delta"),
-            delta=delta))
+            delta=delta), deadline_steps)
 
-    def submit_recommend(self, tenant_id: str,
-                         budget_bytes: float) -> FleetTicket:
+    def submit_recommend(self, tenant_id: str, budget_bytes: float,
+                         deadline_steps: Optional[int] = None
+                         ) -> FleetTicket:
         return self._submit(_FleetRequest(
             tenant_id, "recommend", FleetTicket(tenant_id, "recommend"),
-            budget_bytes=float(budget_bytes)))
+            budget_bytes=float(budget_bytes)), deadline_steps)
 
     # ------------------------------------------------------------------
     # Service loop (mirrors ServeEngine: admit -> batch -> execute ->
@@ -266,18 +431,85 @@ class AdvisorFleetService:
     def _admit(self) -> None:
         """Fill free slots from the queue in arrival order, at most one
         in-flight request per tenant so each tenant's requests execute
-        in its own submission order (per-tenant FIFO)."""
+        in its own submission order (per-tenant FIFO).  Requests backing
+        off after a transient failure (`not_before`) are skipped until
+        their step comes up — and BLOCK their tenant's later requests
+        meanwhile, or the backoff would reorder that tenant's stream."""
         for i in range(len(self.slots)):
             if self.slots[i] is not None:
                 continue
+            blocked = {tid for tid, t in self.tenants.items()
+                       if t.in_flight is not None}
             for qi, req in enumerate(self.queue):
-                if self.tenants[req.tenant_id].in_flight is None:
-                    self.queue.pop(qi)
-                    self.slots[i] = req
-                    self.tenants[req.tenant_id].in_flight = req
-                    break
+                if req.tenant_id in blocked:
+                    continue
+                if req.not_before > self.steps:
+                    blocked.add(req.tenant_id)
+                    continue
+                self.queue.pop(qi)
+                self.slots[i] = req
+                self.tenants[req.tenant_id].in_flight = req
+                break
             else:
                 break  # nothing admissible for this (or any later) slot
+
+    def _expire(self) -> None:
+        """Resolve queued requests that outlived their deadline.
+
+        Deadlines are measured in service STEPS since submission (the
+        retry backoff shares the clock), so expiry is deterministic.  An
+        expired recommend at the head of its tenant's FIFO degrades when
+        `degraded_budget` is configured; everything else resolves with
+        `TicketTimeout`."""
+        if not any(r.deadline_steps is not None for r in self.queue):
+            return
+        kept: List[_FleetRequest] = []
+        has_earlier = set()   # tenants with a surviving earlier request
+        for req in self.queue:
+            dl = req.deadline_steps
+            waited = self.steps - req.submitted_step
+            if dl is None or waited < dl:
+                kept.append(req)
+                has_earlier.add(req.tenant_id)
+                continue
+            t = self.tenants[req.tenant_id]
+            if (req.kind == "recommend"
+                    and self.fc.degraded_budget is not None
+                    and req.tenant_id not in has_earlier
+                    and t.session is not None):
+                self._execute_degraded(req, t)
+            else:
+                req.ticket._resolve(error=TicketTimeout(
+                    f"tenant {req.tenant_id!r} {req.kind} request "
+                    f"exceeded its deadline of {dl} service steps "
+                    f"(waited {waited})"))
+                self.timeouts += 1
+            t.n_pending -= 1
+            self.retired += 1
+        self.queue = kept
+
+    def _execute_degraded(self, req: _FleetRequest, t: _Tenant) -> None:
+        """Deadline-pressure fallback: serve the recommend NOW from a
+        one-shot session at the smaller `degraded_budget` workload-
+        compression budget.  The result is exact for that budget (`==` a
+        fresh DesignAdvisor with the same option) and carries the PR 5
+        error certificate quantifying the approximation to the
+        full-budget answer; `ticket.degraded` marks it."""
+        assert t.session is not None and req.budget_bytes is not None
+        try:
+            opt = dataclasses.replace(
+                t.session.opt, compression_budget=self.fc.degraded_budget)
+            deg = AdvisorSession(t.session.workload, opt,
+                                 samples=t.group.samples,
+                                 sampled_cache=t.group.cache)
+            rec = deg.recommend(req.budget_bytes)
+            req.ticket.degraded = True
+            t.recommends += 1
+            t.consecutive_failures = 0
+            self.degraded_recommends += 1
+            req.ticket._resolve(rec)
+        except BaseException as e:
+            self._final_failure(req, t, e)
 
     def _prefetch(self) -> None:
         """Union-batch the admitted recommends' missing SampleCF targets.
@@ -287,20 +519,33 @@ class AdvisorFleetService:
         its SAMPLED nodes not yet in the group cache, and size each
         (group, f) union in ONE `estimate_batch` call.  Per-target
         results are byte-identical to the scalar path, so cache content
-        does not depend on which tenants were batched together."""
+        does not depend on which tenants were batched together.
+
+        A failed peek or batch is counted in `prefetch_failures` and
+        attached to the affected tickets (`ticket.prefetch_error`) —
+        never swallowed silently.  It is NOT fatal: the prefetch is a
+        pure warm-up, so the slot's recommend recomputes (or re-raises,
+        for session faults) on its own."""
         missing: Dict[Tuple[Tuple[str, str], float], List[NodeKey]] = {}
         seen: Dict[Tuple[Tuple[str, str], float], set] = {}
+        contributors: Dict[Tuple[Tuple[str, str], float],
+                           List[FleetTicket]] = {}
         for req in self.slots:
             if req is None or req.kind != "recommend":
                 continue
             t = self.tenants[req.tenant_id]
+            if t.session is None:
+                continue
             try:
                 plan = t.session.peek_estimation_plan()
-            except Exception:
-                continue  # let the slot's recommend surface the error
+            except Exception as e:
+                self.prefetch_failures += 1
+                req.ticket.prefetch_error = e
+                continue  # the slot's recommend surfaces/retries it
             if plan is None:
                 continue
             gk = (t.group.key, plan.f)
+            contributors.setdefault(gk, []).append(req.ticket)
             got = seen.setdefault(gk, set())
             for k, node in plan.nodes.items():
                 if node.state is not State.SAMPLED or k in got:
@@ -312,14 +557,64 @@ class AdvisorFleetService:
                     missing.setdefault(gk, []).append(k)
         for (group_key, f), keys in missing.items():
             group = self.groups[group_key]
-            for k, est in group.engine.estimate_batch(keys, f).items():
+            try:
+                if self.faults is not None:
+                    self.faults.check(
+                        "prefetch", f"batch of {len(keys)} at f={f}")
+                ests = group.engine.estimate_batch(keys, f)
+            except Exception as e:
+                self.prefetch_failures += 1
+                for tk in contributors.get((group_key, f), ()):
+                    tk.prefetch_error = e
+                continue  # recommends fall back to per-session estimation
+            for k, est in ests.items():
                 group.cache[(k, f)] = est
             self.prefetch_batches += 1
             self.prefetch_targets += len(keys)
 
-    def _execute(self, req: _FleetRequest) -> None:
+    def _final_failure(self, req: _FleetRequest, t: _Tenant,
+                       e: BaseException) -> None:
+        """Resolve a request with its (post-retry) error and feed the
+        tenant's circuit breaker."""
+        req.ticket._resolve(error=e)
+        t.consecutive_failures += 1
+        self.failures += 1
+        if (t.quarantined_at is None
+                and self.fc.quarantine_after is not None
+                and t.consecutive_failures >= self.fc.quarantine_after):
+            self._quarantine(
+                t, f"{t.consecutive_failures} consecutive failures "
+                f"(last: {type(e).__name__}: {e})")
+
+    def _quarantine(self, t: _Tenant, reason: str) -> None:
+        """Circuit breaker: isolate the tenant from its share group —
+        drop the (possibly poisoned) session, flush its queued requests
+        with `TenantQuarantined`, reject new submits — until checkpoint
+        restore readmits it."""
+        t.quarantined_at = self.steps
+        t.quarantines += 1
+        self.quarantines += 1
+        t.session = None
+        mine = [r for r in self.queue if r.tenant_id == t.tenant_id]
+        self.queue = [r for r in self.queue if r.tenant_id != t.tenant_id]
+        for r in mine:
+            r.ticket._resolve(error=TenantQuarantined(
+                f"tenant {t.tenant_id!r} quarantined at step "
+                f"{t.quarantined_at}: {reason}"))
+            t.n_pending -= 1
+            self.retired += 1
+
+    def _execute(self, req: _FleetRequest) -> bool:
+        """Run one slot's request.  Returns True when the request is
+        retired (resolved either way), False when it was requeued for a
+        deterministic-backoff retry after a transient `FaultError`."""
         t = self.tenants[req.tenant_id]
+        req.attempts += 1
+        req.ticket.attempts = req.attempts
         try:
+            if t.session is None:
+                raise SessionLost(
+                    f"tenant {req.tenant_id!r} has no live session")
             if req.kind == "delta":
                 assert req.delta is not None
                 cap = t.budget.max_statements
@@ -334,6 +629,11 @@ class AdvisorFleetService:
                             f"(max_statements={cap})")
                 t.session.apply(req.delta)
                 t.deltas_applied += 1
+                # checkpoint AFTER every successful delta: the snapshot
+                # always equals the live workload (failed deltas never
+                # mutate), so a later crash restores to current state
+                t.snapshot = t.session.snapshot(include_estimates=False)
+                t.consecutive_failures = 0
                 req.ticket._resolve({
                     "applied": True,
                     "workload_version": t.session.workload_version,
@@ -342,34 +642,69 @@ class AdvisorFleetService:
                 assert req.budget_bytes is not None
                 rec = t.session.recommend(req.budget_bytes)
                 t.recommends += 1
+                t.consecutive_failures = 0
                 req.ticket._resolve(rec)
         except BaseException as e:      # isolate failures to this tenant
-            req.ticket._resolve(error=e)
+            if isinstance(e, FaultError) and \
+                    req.attempts <= len(self.fc.retry_backoff):
+                # transient: requeue at the FRONT (this is the tenant's
+                # oldest request, so front-insertion preserves both its
+                # own FIFO and fairness to other tenants' older work)
+                req.not_before = (self.steps + 1
+                                  + self.fc.retry_backoff[req.attempts - 1])
+                self.queue.insert(0, req)
+                self.retries += 1
+                return False
+            self._final_failure(req, t, e)
+        return True
 
     def step(self) -> None:
-        """One service iteration: admit queued requests into free slots,
-        run the cross-tenant batched prefetch over the admitted
-        recommends, execute every slot, retire them all (a request is
-        one unit of work, so slots turn over every step)."""
+        """One service iteration: readmit cooled-down tenants, expire
+        overdue requests, admit queued requests into free slots, run the
+        cross-tenant batched prefetch over the admitted recommends,
+        execute every slot, retire (a request is one unit of work, so
+        slots turn over every step).  `steps` advances every call —
+        also on idle ticks — because the retry backoff and quarantine
+        cooldown measure time in steps."""
+        if self.fc.quarantine_steps is not None:
+            for t in self.tenants.values():
+                if t.quarantined_at is not None and \
+                        self.steps - t.quarantined_at >= \
+                        self.fc.quarantine_steps:
+                    self.readmit_tenant(t.tenant_id)
+        self._expire()
         self._admit()
-        if all(s is None for s in self.slots):
-            return
-        if self.fc.prefetch:
-            self._prefetch()
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self._execute(req)
-            t = self.tenants[req.tenant_id]
-            t.in_flight = None
-            t.n_pending -= 1
-            self.slots[i] = None
-            self.retired += 1
+        if any(s is not None for s in self.slots):
+            if self.fc.prefetch:
+                self._prefetch()
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                retired = self._execute(req)
+                t = self.tenants[req.tenant_id]
+                t.in_flight = None
+                self.slots[i] = None
+                if retired:
+                    t.n_pending -= 1
+                    self.retired += 1
         self.steps += 1
 
     def run_until_drained(self, max_steps: int = 1_000_000) -> None:
-        while self.queue and self.steps < max_steps:
+        """Step until the queue is empty, or raise `DrainStalled` after
+        `max_steps` steps THIS CALL (never silently return with work
+        still queued)."""
+        for _ in range(max_steps):
+            if not self.queue:
+                return
             self.step()
+        if self.queue:
+            pending: Dict[str, int] = {}
+            for r in self.queue:
+                pending[r.tenant_id] = pending.get(r.tenant_id, 0) + 1
+            raise DrainStalled(
+                f"drain stalled after {max_steps} steps with "
+                f"{len(self.queue)} requests queued "
+                f"(per tenant: {pending})", len(self.queue), pending)
 
     # ------------------------------------------------------------------
     @property
@@ -383,18 +718,36 @@ class AdvisorFleetService:
             "prefetch_batches": self.prefetch_batches,
             "prefetch_targets": self.prefetch_targets,
             "prefetch_hits": self.prefetch_hits,
+            "prefetch_failures": self.prefetch_failures,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "degraded_recommends": self.degraded_recommends,
+            "failures": self.failures,
+            "quarantines": self.quarantines,
+            "restores": self.restores,
+            "quarantined_tenants": sum(
+                1 for t in self.tenants.values()
+                if t.quarantined_at is not None),
         }
         out["shared_cache_entries"] = sum(
             len(g.cache) for g in self.groups.values())
+        out["shared_cache_evictions"] = sum(
+            g.cache.evictions for g in self.groups.values()
+            if isinstance(g.cache, EstimateCache))
         out["sampling_calls"] = sum(
             g.samples.sampling_calls for g in self.groups.values())
         return out
 
     def tenant_stats(self, tenant_id: str) -> Dict[str, float]:
         t = self.tenants[tenant_id]
-        out = dict(t.session.stats)
+        out = dict(t.session.stats) if t.session is not None else {}
         out.update(deltas_applied=t.deltas_applied,
                    recommends=t.recommends,
-                   n_statements=len(t.session.workload.statements),
+                   consecutive_failures=t.consecutive_failures,
+                   quarantined=t.quarantined_at is not None,
+                   quarantines=t.quarantines,
+                   restores=t.restores,
                    group_tenants=t.group.n_tenants)
+        if t.session is not None:
+            out["n_statements"] = len(t.session.workload.statements)
         return out

@@ -16,12 +16,14 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (AdvisorOptions, DesignAdvisor, WorkloadDelta,
+from repro.core import (AdvisorOptions, DesignAdvisor, FaultError,
+                        FaultInjector, FaultSpec, WorkloadDelta,
                         make_scaled_workload, make_tpch_like)
 from repro.core.samplecf import schema_fingerprint
-from repro.serve.advisor_service import (AdvisorFleetService, FleetConfig,
-                                         TenantBudget,
-                                         TenantBudgetExceeded)
+from repro.serve.advisor_service import (AdvisorFleetService, DrainStalled,
+                                         FleetConfig, TenantBudget,
+                                         TenantBudgetExceeded,
+                                         TenantQuarantined, TicketTimeout)
 from repro.serve.engine import QueueFull
 
 BUDGET = 2_000_000
@@ -249,3 +251,197 @@ class TestIsolation:
         fleet.register_tenant("a", tenant_workload(schema, "a"))
         with pytest.raises(ValueError):
             fleet.register_tenant("a", tenant_workload(schema, "a"))
+
+
+class TestDurability:
+    """Deadlines, retries, quarantine/restore, bounded caches — the
+    parity contract through the failure surface."""
+
+    def test_transient_fault_retried_to_success(self, schema):
+        """A delta failing with a transient FaultError is requeued with
+        step backoff and retried bit-exactly."""
+        opt = AdvisorOptions.dtac()
+        inj = FaultInjector(specs={"apply_delta": FaultSpec(at=(0,))})
+        fleet = AdvisorFleetService(FleetConfig(slots=2), faults=inj)
+        wl = tenant_workload(schema, "t0", seed=50)
+        fleet.register_tenant("t0", wl, opt)
+        delta = WorkloadDelta(removed=(wl.statements[0].name,))
+        tk = fleet.submit_delta("t0", delta)
+        rk = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        assert tk.result()["applied"] is True
+        assert tk.attempts == 2                  # one fault, one success
+        assert fleet.stats["retries"] == 1
+        assert fleet.stats["failures"] == 0
+        fresh = DesignAdvisor(wl.apply_delta(delta), opt).recommend(BUDGET)
+        assert identical(rk.result(), fresh)
+
+    def test_retry_exhaustion_quarantines_then_restore(self, schema):
+        """A persistent fault exhausts the bounded retries, trips the
+        circuit breaker, flushes the tenant's queue with
+        TenantQuarantined and rejects submits; checkpoint readmission
+        brings the tenant back `==` a fresh advisor."""
+        opt = AdvisorOptions.dtac()
+        inj = FaultInjector(specs={"apply_delta": 1.0})  # always fires
+        fc = FleetConfig(slots=1, retry_backoff=(1, 2),
+                         quarantine_after=1)
+        fleet = AdvisorFleetService(fc, faults=inj)
+        wl = tenant_workload(schema, "t0", seed=50)
+        fleet.register_tenant("t0", wl, opt)
+        tk = fleet.submit_delta(
+            "t0", WorkloadDelta(removed=(wl.statements[0].name,)))
+        queued = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        assert isinstance(tk.exception(), FaultError)
+        assert tk.attempts == 3                 # 1 + len(retry_backoff)
+        assert isinstance(queued.exception(), TenantQuarantined)
+        s = fleet.stats
+        assert s["quarantines"] == 1 and s["quarantined_tenants"] == 1
+        with pytest.raises(TenantQuarantined):
+            fleet.submit_recommend("t0", BUDGET)
+        fleet.readmit_tenant("t0")
+        assert fleet.stats["restores"] == 1
+        rk = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        # the faulted delta never applied: parity vs the ORIGINAL workload
+        fresh = DesignAdvisor(wl, opt).recommend(BUDGET)
+        assert identical(rk.result(), fresh)
+
+    def test_crash_then_auto_readmit_parity(self, schema):
+        """crash_tenant drops the session; the quarantine_steps cooldown
+        restores it from the post-delta checkpoint, so the recovered
+        tenant recommends against its CURRENT workload."""
+        opt = AdvisorOptions.dtac()
+        fc = FleetConfig(slots=2, quarantine_steps=2)
+        fleet = AdvisorFleetService(fc)
+        wl = tenant_workload(schema, "t0", seed=50)
+        fleet.register_tenant("t0", wl, opt)
+        delta = WorkloadDelta(removed=(wl.statements[0].name,
+                                       wl.statements[1].name))
+        fleet.submit_delta("t0", delta)
+        fleet.run_until_drained()
+        wl = wl.apply_delta(delta)
+        fleet.crash_tenant("t0")
+        assert fleet.tenants["t0"].session is None
+        for _ in range(10):                     # idle ticks drive cooldown
+            if fleet.tenants["t0"].quarantined_at is None:
+                break
+            fleet.step()
+        assert fleet.tenants["t0"].quarantined_at is None
+        ts = fleet.tenant_stats("t0")
+        assert ts["restores"] == 1 and ts["n_statements"] == \
+            len(wl.statements)
+        rk = fleet.submit_recommend("t0", BUDGET)
+        fleet.run_until_drained()
+        assert identical(rk.result(),
+                         DesignAdvisor(wl, opt).recommend(BUDGET))
+        assert len(fleet.restore_seconds) == 1
+
+    def test_deadline_expires_queued_request(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 1, opt, fc=FleetConfig(slots=1))
+        first = fleet.submit_recommend("t0", BUDGET)
+        late = fleet.submit_recommend("t0", BUDGET, deadline_steps=1)
+        fleet.run_until_drained()
+        assert identical(first.result(),
+                         DesignAdvisor(wls["t0"], opt).recommend(BUDGET))
+        with pytest.raises(TicketTimeout, match="t0.*deadline"):
+            late.result()
+        assert fleet.stats["timeouts"] == 1
+
+    def test_deadline_pressure_degrades_recommend(self, schema):
+        """With degraded_budget set, an expiring recommend is served NOW
+        at the smaller workload-compression budget — exact for that
+        budget, certificate attached — instead of failing."""
+        opt = AdvisorOptions.dtac()
+        fc = FleetConfig(slots=1, degraded_budget=6)
+        fleet = AdvisorFleetService(fc)
+        wl0 = tenant_workload(schema, "t0", seed=50)
+        wl1 = tenant_workload(schema, "t1", seed=51)
+        fleet.register_tenant("t0", wl0, opt)
+        fleet.register_tenant("t1", wl1, opt)
+        fleet.submit_recommend("t0", BUDGET)      # occupies the one slot
+        tk = fleet.submit_recommend("t1", BUDGET, deadline_steps=1)
+        fleet.run_until_drained()
+        assert tk.degraded is True
+        assert fleet.stats["degraded_recommends"] == 1
+        dopt = dataclasses.replace(opt, compression_budget=6)
+        fresh = DesignAdvisor(wl1, dopt).recommend(BUDGET)
+        rec = tk.result()
+        assert identical(rec, fresh)
+        # the certificate rides along: the degraded answer is an exact
+        # advisor run on <= 6 representatives, error bound included
+        assert 0 < rec.n_representatives <= 6
+        assert rec.compression_error_bound >= 0.0
+
+    def test_drain_stall_raises_with_pending_counts(self, schema):
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 1, opt, fc=FleetConfig(slots=1))
+        tk = fleet.submit_recommend("t0", BUDGET)
+        with pytest.raises(DrainStalled) as ei:
+            fleet.run_until_drained(max_steps=0)
+        assert ei.value.queued == 1
+        assert ei.value.pending_by_tenant == {"t0": 1}
+        fleet.run_until_drained()                 # work was NOT lost
+        assert identical(tk.result(),
+                         DesignAdvisor(wls["t0"], opt).recommend(BUDGET))
+
+    def test_prefetch_failure_counted_not_fatal(self, schema):
+        """A failing prefetch batch is counted, attached to the affected
+        tickets, and the recommends still resolve bit-exactly (the warm-
+        up is pure optimization)."""
+        opt = AdvisorOptions.dtac()
+        inj = FaultInjector(specs={"prefetch": 1.0})
+        fleet = AdvisorFleetService(FleetConfig(slots=2), faults=inj)
+        wls = {}
+        for i in range(2):
+            tid = f"t{i}"
+            wls[tid] = tenant_workload(schema, tid, seed=50 + i)
+            fleet.register_tenant(tid, wls[tid], opt)
+        tks = {tid: fleet.submit_recommend(tid, BUDGET) for tid in wls}
+        fleet.run_until_drained()
+        s = fleet.stats
+        assert s["prefetch_failures"] >= 1
+        assert s["prefetch_batches"] == 0         # every batch faulted
+        assert any(isinstance(tk.prefetch_error, FaultError)
+                   for tk in tks.values())
+        for tid, tk in tks.items():
+            assert identical(tk.result(),
+                             DesignAdvisor(wls[tid], opt).recommend(BUDGET))
+
+    def test_result_default_timeout_names_tenant_and_kind(self, schema):
+        """A ticket awaited while the loop is not running fails fast
+        with a message saying WHOSE request is stuck, not a silent
+        forever-block."""
+        opt = AdvisorOptions.dtac()
+        fleet, _ = make_fleet(schema, 1, opt)
+        tk = fleet.submit_recommend("t0", BUDGET)
+        with pytest.raises(TicketTimeout, match="'t0' recommend"):
+            tk.result(timeout=0.01)
+        fleet.run_until_drained()
+        tk.result()                               # resolves normally now
+
+    def test_bounded_group_cache_keeps_parity(self, schema):
+        """A tight share-group LRU forces evictions across drift rounds;
+        every recommendation stays `==` the fresh advisor."""
+        opt = AdvisorOptions.dtac()
+        fleet, wls = make_fleet(schema, 2, opt,
+                                fc=FleetConfig(slots=2, cache_entries=8))
+        for rnd in range(2):
+            tks = {}
+            for i, tid in enumerate(list(wls)):
+                added = tuple(dataclasses.replace(s, name=f"{tid}_b{rnd}{j}")
+                              for j, s in enumerate(make_scaled_workload(
+                                  schema, n_statements=2,
+                                  seed=700 + rnd * 10 + i).statements))
+                delta = WorkloadDelta(added=added)
+                fleet.submit_delta(tid, delta)
+                wls[tid] = wls[tid].apply_delta(delta)
+                tks[tid] = fleet.submit_recommend(tid, BUDGET)
+            fleet.run_until_drained()
+            for tid, tk in tks.items():
+                fresh = DesignAdvisor(wls[tid], opt).recommend(BUDGET)
+                assert identical(tk.result(), fresh), (rnd, tid)
+        s = fleet.stats
+        assert s["shared_cache_entries"] <= 8
+        assert s["shared_cache_evictions"] > 0
