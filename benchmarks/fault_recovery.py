@@ -83,9 +83,11 @@ def make_delta(rng, tid: str, rnd: int, wl, schema) -> WorkloadDelta:
 
 def run_storm(tenants: int, rounds: int, slots: int, statements: int,
               scale: float, seed: int, budget_frac: float,
-              deadline: int, degraded_budget: int) -> dict:
+              deadline: int, degraded_budget: int,
+              backend: str = "numpy") -> dict:
     schema = make_tpch_like(scale=scale, z=0, seed=seed)
-    opt = AdvisorOptions.dtac()
+    opt = dataclasses.replace(AdvisorOptions.dtac(),
+                              backend=backend)
     faults = FaultInjector(seed=seed + 1, specs={
         "apply_delta": 0.08, "estimation": 0.05, "costing": 0.05,
         "prefetch": 0.25, "planner_replay": 0.05})
@@ -205,11 +207,12 @@ def run_storm(tenants: int, rounds: int, slots: int, statements: int,
 
 def run_bounded(rounds: int, statements: int, scale: float, seed: int,
                 budget_frac: float, cache_entries: int, max_nodes: int,
-                max_replay: int) -> dict:
+                max_replay: int, backend: str = "numpy") -> dict:
     schema = make_tpch_like(scale=scale, z=0, seed=seed)
     opt = dataclasses.replace(AdvisorOptions.dtac(),
                               max_planner_nodes=max_nodes,
-                              max_replay_entries=max_replay)
+                              max_replay_entries=max_replay,
+                              backend=backend)
     fleet = AdvisorFleetService(
         FleetConfig(slots=1, cache_entries=cache_entries))
     tid = "t0"
@@ -263,11 +266,11 @@ def run(args, out_path: Path) -> dict:
     storm = run_storm(args.tenants, args.rounds, args.slots,
                       args.statements, args.scale, args.seed,
                       args.budget_frac, args.deadline,
-                      args.degraded_budget)
+                      args.degraded_budget, args.backend)
     bounded = run_bounded(args.bounded_rounds, args.statements,
                           args.scale, args.seed, args.budget_frac,
                           args.cache_entries, args.max_nodes,
-                          args.max_replay)
+                          args.max_replay, args.backend)
     fired = storm["fault_injector"]["fired"]
     ok = (
         storm["parity_failures"] == 0
@@ -284,7 +287,8 @@ def run(args, out_path: Path) -> dict:
         and bounded["peak_shared_cache_entries"] <= args.cache_entries
         and all(v > 0 for v in bounded["evictions"].values())
     )
-    report = {"storm": storm, "bounded": bounded, "ok": ok}
+    report = {"backend": args.backend, "storm": storm,
+              "bounded": bounded, "ok": ok}
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
     if ok:
@@ -308,6 +312,9 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--budget-frac", type=float, default=0.25)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="unified advisor backend; exactness through "
+                    "faults is asserted either way")
     ap.add_argument("--deadline", type=int, default=6,
                     help="recommend deadline in service steps (tight "
                     "enough that queue pressure exercises the degraded "

@@ -80,10 +80,11 @@ def make_delta(rng, tid: str, rnd: int, wl, schema, n_move: int,
 
 def run(tenants: int, schema_groups: int, statements: int, scale: float,
         rounds: int, slots: int, n_move: int, n_reweight: int, seed: int,
-        budget_frac: float, out_path: Path) -> dict:
+        budget_frac: float, out_path: Path,
+        backend: str = "numpy") -> dict:
     schemas = [make_tpch_like(scale=scale, z=0, seed=seed + g)
                for g in range(schema_groups)]
-    opt = AdvisorOptions.dtac()
+    opt = dataclasses.replace(AdvisorOptions.dtac(), backend=backend)
     fleet = AdvisorFleetService(FleetConfig(slots=slots))
 
     wls = {}
@@ -142,6 +143,7 @@ def run(tenants: int, schema_groups: int, statements: int, scale: float,
     misses = sum(fleet.tenant_stats(t)["samplecf_cache_misses"]
                  for t in wls)
     report = {
+        "backend": backend,
         "tenants": tenants,
         "schema_groups": schema_groups,
         "statements_per_tenant": statements,
@@ -192,6 +194,9 @@ def main() -> int:
     ap.add_argument("--reweights", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--budget-frac", type=float, default=0.25)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="unified advisor backend for every tenant; "
+                    "per-tenant parity is asserted every round either way")
     ap.add_argument("--out", type=Path, default=None,
                     help="output JSON path (default: BENCH_fleet.json at "
                     "the repo root; smoke runs write "
@@ -213,7 +218,8 @@ def main() -> int:
                            else "BENCH_fleet.json")
     report = run(args.tenants, args.schema_groups, args.statements,
                  args.scale, args.rounds, args.slots, args.moves,
-                 args.reweights, args.seed, args.budget_frac, args.out)
+                 args.reweights, args.seed, args.budget_frac, args.out,
+                 args.backend)
     return 0 if report.get("ok") else 1
 
 

@@ -63,10 +63,10 @@ def identical(a, b) -> bool:
 
 def run(statements: int, scale: float, seed: int, rounds: int, n_move: int,
         n_reweight: int, budget_frac: float, min_speedup: float,
-        out_path: Path) -> dict:
+        out_path: Path, backend: str = "numpy") -> dict:
     schema = make_tpch_like(scale=scale, z=0, seed=seed)
     wl = make_scaled_workload(schema, n_statements=statements, seed=seed)
-    opt = AdvisorOptions.dtac()
+    opt = dataclasses.replace(AdvisorOptions.dtac(), backend=backend)
     base_size = sum(DesignAdvisor(wl).sizes.size(i)
                     for i in base_configuration(schema).indexes)
     budget = budget_frac * base_size
@@ -119,6 +119,7 @@ def run(statements: int, scale: float, seed: int, rounds: int, n_move: int,
     speedups = [r["speedup"] for r in round_rows]
     med = statistics.median(speedups)
     report = {
+        "backend": backend,
         "n_statements": statements,
         "schema_scale": scale,
         "rounds": rounds,
@@ -157,6 +158,9 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="unified advisor backend (AdvisorOptions.backend); "
+                    "parity vs the fresh advisor is asserted either way")
     ap.add_argument("--moves", type=int, default=4,
                     help="statements added AND removed per churn round")
     ap.add_argument("--reweights", type=int, default=8,
@@ -187,7 +191,7 @@ def main() -> int:
                            else "BENCH_session.json")
     report = run(args.statements, args.scale, args.seed, args.rounds,
                  args.moves, args.reweights, args.budget_frac,
-                 args.min_speedup, args.out)
+                 args.min_speedup, args.out, args.backend)
     return 0 if report.get("ok") else 1
 
 

@@ -60,7 +60,8 @@ def _timed_recommend(wl, options, budget_bytes, trace=False):
 
 
 def run(sizes, scale, comp_budget, budget_frac, seed, curve_budgets,
-        gate_factor, mem_cap_mb, out_path: Path) -> dict:
+        gate_factor, mem_cap_mb, out_path: Path,
+        backend: str = "numpy") -> dict:
     schema = make_tpch_like(scale=scale, z=0, seed=seed)
     base = base_configuration(schema)
     wl0 = make_scaled_workload(schema, n_statements=sizes[0], seed=seed)
@@ -89,7 +90,8 @@ def run(sizes, scale, comp_budget, budget_frac, seed, curve_budgets,
 
     # ---- scaling rows ----
     rows = []
-    opts = AdvisorOptions(compression_budget=comp_budget)
+    opts = AdvisorOptions(compression_budget=comp_budget,
+                          backend=backend)
     for n in sizes:
         t0 = time.perf_counter()
         wl = make_scaled_workload(schema, n_statements=n, seed=seed)
@@ -158,6 +160,7 @@ def run(sizes, scale, comp_budget, budget_frac, seed, curve_budgets,
               f"{eps / max(abs(true_cost), 1e-12):.3f}")
 
     report = {
+        "backend": backend,
         "schema_scale": scale,
         "budget_frac": budget_frac,
         "compression_budget": comp_budget,
@@ -200,6 +203,8 @@ def main() -> int:
     ap.add_argument("--compression-budget", type=int, default=128)
     ap.add_argument("--budget-frac", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="unified advisor backend for the scaling rows")
     ap.add_argument("--curve-budgets", type=int, nargs="+",
                     default=[32, 64, 128, 256, 512, 1024])
     ap.add_argument("--gate-factor", type=float, default=1.0,
@@ -228,7 +233,7 @@ def main() -> int:
                            else "BENCH_workload.json")
     report = run(args.sizes, args.scale, args.compression_budget,
                  args.budget_frac, args.seed, args.curve_budgets,
-                 args.gate_factor, args.mem_cap_mb, args.out)
+                 args.gate_factor, args.mem_cap_mb, args.out, args.backend)
     return 0 if report.get("ok") else 1
 
 

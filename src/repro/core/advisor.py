@@ -59,6 +59,21 @@ class AdvisorOptions:
     estimation_backend: str = "numpy"      # "numpy" | "jax"
     use_batched_planner: bool = True       # batched §5.2 planner engine
     planner_backend: str = "numpy"         # "numpy" | "jax"
+    # THE unified accelerator knob: backend="jax" (or "numpy") overrides
+    # every per-module *_backend above, threading one backend through
+    # costing, codec-bytes kernels, estimation, planner scoring, and the
+    # fleet COST phase.  None keeps the per-module knobs (compat).
+    backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.backend is not None:
+            from .backend import BACKENDS
+            if self.backend not in BACKENDS:
+                raise ValueError(f"unknown backend {self.backend!r} "
+                                 f"(expected one of {BACKENDS})")
+            self.engine_backend = self.backend
+            self.estimation_backend = self.backend
+            self.planner_backend = self.backend
     # advise on <= ~N weighted representatives (workload compression);
     # None disables, and budget >= n_statements is an exact bypass
     compression_budget: Optional[int] = None

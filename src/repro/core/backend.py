@@ -1,0 +1,66 @@
+"""Unified accelerator-backend resolution for the advisor stack.
+
+One backend knob — ``AdvisorOptions(backend=...)`` — threads through every
+engine (CostEngine, compression codec kernels, EstimationEngine,
+PlannerEngine) and the fleet service.  This module is the single place
+that decides whether a requested backend can actually run:
+
+* ``"numpy"`` — the float64 parity reference.  Always available.
+* ``"jax"``  — Pallas kernels (repro.kernels.codec_bytes /
+  planner_score) plus jax.jit scoring kernels.  Requires jax; runs in
+  interpret mode on CPU and compiled on TPU.  The old int64/x64 gate is
+  gone: codec kernels do exact int32-safe math through uint32 planes.
+
+Fallback semantics: when ``"jax"`` is requested but jax is unavailable,
+`resolve` downgrades to ``"numpy"`` — but never silently.  Each resolving
+engine gets a one-time `BackendFallbackWarning` (once per call site per
+process) and counts the event in its ``stats()["backend_fallbacks"]``.
+Unknown backend names always raise ValueError.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+try:  # repro.kernels idiom: gate, don't require
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - jax is baked into the image
+    HAVE_JAX = False
+
+BACKENDS = ("numpy", "jax")
+
+
+class BackendFallbackWarning(UserWarning):
+    """A requested accelerator backend was unavailable; numpy ran instead."""
+
+
+_warned_sites = set()
+
+
+def available(backend: str) -> bool:
+    """True when `backend` can actually run in this process."""
+    return backend == "numpy" or (backend == "jax" and HAVE_JAX)
+
+
+def resolve(backend: str, site: Optional[str] = None) -> Tuple[str, bool]:
+    """Validate `backend` and downgrade to numpy if it cannot run.
+
+    Returns (resolved_backend, fell_back).  With `site` set, an
+    unavailable backend emits a one-time BackendFallbackWarning per site;
+    site=None resolves quietly (for callers that only need the answer,
+    e.g. WhatIfOptimizer deciding whether a rebuild is needed).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r} (expected one of "
+                         f"{BACKENDS})")
+    if available(backend):
+        return backend, False
+    if site is not None and site not in _warned_sites:
+        _warned_sites.add(site)
+        warnings.warn(
+            f"{site}: backend={backend!r} requested but unavailable "
+            f"(jax import failed); falling back to numpy. This warning "
+            f"is emitted once per site.", BackendFallbackWarning,
+            stacklevel=3)
+    return "numpy", True

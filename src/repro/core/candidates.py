@@ -75,15 +75,23 @@ def expand_with_compression(indexes: Sequence[IndexDef],
 def cost_candidates(query: Query, cands: Sequence[IndexDef],
                     base: Configuration, optimizer: WhatIfOptimizer,
                     sizes: SizeProvider,
-                    engine: Optional["CostEngine"] = None) -> List[Candidate]:
+                    engine: Optional["CostEngine"] = None,
+                    precomputed=None) -> List[Candidate]:
     """Cost each single-index configuration for `query`.
 
     With `engine` (a repro.core.cost_engine.CostEngine) the whole candidate
     list is scored in one vectorized pass; without it, the scalar what-if
     optimizer is queried per candidate (the correctness reference).
+    `precomputed` (an array aligned with `cands`, e.g. the fleet service's
+    cross-tenant cost prefetch) short-circuits the engine call; the caller
+    owns the contract that it holds exactly the values the engine would
+    return.
     """
-    costs = (engine.candidate_query_costs(query, base, cands)
-             if engine is not None else None)
+    if precomputed is not None:
+        costs = precomputed
+    else:
+        costs = (engine.candidate_query_costs(query, base, cands)
+                 if engine is not None else None)
     out = []
     for k, idx in enumerate(cands):
         if idx.clustered:

@@ -17,14 +17,18 @@ column stack — one row per (target, column) job, all rows sharing the same
 rows-per-page — returning one payload-byte count per row.  The batched
 kernels are exact integer re-expressions of the scalar ones (asserted
 property-by-property in tests/test_core_compression.py) so the estimation
-engine built on them is byte-identical to per-target SampleCF.  An optional
-jax.jit backend mirrors `CostEngine(backend="jax")`: same formulas under
-`jax.numpy`, gated on jax availability + int64 (x64) support, with a silent
-NumPy fallback.
+engine built on them is byte-identical to per-target SampleCF.
+
+Backend architecture (see repro.core.backend): `batched_bytes(...,
+backend="jax")` dispatches to the Pallas segment-reduce kernels in
+repro.kernels.codec_bytes, which are BIT-IDENTICAL to the NumPy batch
+kernels (int32-safe uint32-plane math — the old int64/x64 gate is gone;
+parity asserted in tests/test_pallas_parity.py).  When jax is unavailable
+the dispatcher runs the NumPy kernels; the unified-backend engines
+surface that fallback via warnings + stats counters (repro.core.backend).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Dict, Sequence
 
 import numpy as np
@@ -32,12 +36,9 @@ import numpy as np
 from .relation import ROW_OVERHEAD, rows_per_page
 
 try:  # optional accelerator backend (repro.kernels idiom: gate, don't require)
-    import jax
-    import jax.numpy as jnp
+    import jax  # noqa: F401
     HAVE_JAX = True
 except Exception:  # pragma: no cover - jax is baked into the image
-    jax = None
-    jnp = None
     HAVE_JAX = False
 
 ORD_IND = "ORD-IND"
@@ -237,102 +238,16 @@ def rle_bytes_batch(cols: np.ndarray, widths: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Optional jax.jit batch kernels (CostEngine(backend="jax") idiom).  All
-# codec math is int64, so the jax path additionally requires x64 mode; when
-# jax or x64 is unavailable the dispatcher falls back to NumPy.
+# Accelerator dispatch.  backend="jax" routes to the Pallas segment-reduce
+# kernels (repro.kernels.codec_bytes): bit-identical int32-safe math via
+# uint32 planes — no x64 requirement.  Inputs outside the kernels' proven
+# int32 envelope are routed back to the NumPy kernels by the kernels
+# module itself, so the dispatcher is exact for every input either way.
 # ---------------------------------------------------------------------------
 
 def jax_batch_ready() -> bool:
-    """True when the jax batch kernels can run with exact int64 math."""
-    if not HAVE_JAX:
-        return False
-    try:
-        return jnp.asarray(np.int64(1)).dtype == jnp.int64
-    except Exception:  # pragma: no cover - defensive
-        return False
-
-
-if HAVE_JAX:
-    def _jax_significant_bytes(v):
-        out = jnp.ones(v.shape, dtype=jnp.int64)
-        for k in range(1, 8):
-            out += (v >= jnp.uint64(1 << (8 * k))).astype(jnp.int64)
-        return out
-
-    def _jax_pages(cols, rpp: int):
-        m, n = cols.shape
-        npages = -(-n // rpp)
-        pad = npages * rpp - n
-        if pad:
-            cols = jnp.concatenate(
-                [cols, jnp.repeat(cols[:, -1:], pad, axis=1)], axis=1)
-        return cols.reshape(m, npages, rpp)
-
-    @jax.jit
-    def _jax_ns_batch(cols, widths):
-        sig = jnp.minimum(_jax_significant_bytes(cols.astype(jnp.uint64)),
-                          widths[:, None])
-        half_bytes = jnp.minimum(2 * sig + 1, 2 * widths[:, None])
-        return (half_bytes.sum(axis=1) + 1) // 2
-
-    @jax.jit
-    def _jax_gdict_batch(cols, widths):
-        srt = jnp.sort(cols, axis=1)
-        ndv = 1 + jnp.count_nonzero(jnp.diff(srt, axis=1), axis=1)
-        ptr = jnp.where(ndv <= 256, 1, jnp.where(ndv <= 65536, 2, 3))
-        return ndv * widths + cols.shape[1] * ptr
-
-    @partial(jax.jit, static_argnames=("rpp",))
-    def _jax_ldict_batch(cols, widths, rows, rpp: int):
-        pages = _jax_pages(cols, rpp)
-        srt = jnp.sort(pages, axis=2)
-        ndv_p = 1 + jnp.count_nonzero(jnp.diff(srt, axis=2), axis=2)
-        ptr = jnp.where(ndv_p <= 256, 1, jnp.where(ndv_p <= 65536, 2, 3))
-        w = widths[:, None]
-        per_page = ndv_p * w + rows[None, :] * ptr + PAGE_META
-        cap = rows[None, :] * w
-        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
-
-    @partial(jax.jit, static_argnames=("rpp",))
-    def _jax_prefix_batch(cols, widths, rows, rpp: int):
-        pages = _jax_pages(cols, rpp)
-        mn = pages.min(axis=2).astype(jnp.uint64)
-        mx = pages.max(axis=2).astype(jnp.uint64)
-        xor = mn ^ mx
-        diff_bytes = jnp.where(xor == 0, 0, _jax_significant_bytes(xor))
-        w = widths[:, None]
-        common = jnp.maximum(w - diff_bytes, 0)
-        per_page = common + rows[None, :] * (1 + w - common) + PAGE_META
-        cap = rows[None, :] * w
-        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
-
-    @partial(jax.jit, static_argnames=("rpp",))
-    def _jax_rle_batch(cols, widths, rows, rpp: int):
-        pages = _jax_pages(cols, rpp)
-        runs = 1 + jnp.count_nonzero(jnp.diff(pages, axis=2), axis=2)
-        w = widths[:, None]
-        per_page = runs * (w + 2) + PAGE_META
-        cap = rows[None, :] * w
-        return jnp.minimum(per_page, cap + PAGE_META).sum(axis=1)
-
-    _JAX_PAGELESS = {"NS": _jax_ns_batch, "GDICT": _jax_gdict_batch}
-    _JAX_PAGED = {"LDICT": _jax_ldict_batch, "PREFIX": _jax_prefix_batch,
-                  "RLE": _jax_rle_batch}
-
-
-def _jax_batched_bytes(method: str, cols: np.ndarray, widths: np.ndarray,
-                       rpp: int) -> np.ndarray:
-    cols, widths = _batch_io(cols, widths)
-    m, n = cols.shape
-    if n == 0:
-        return np.zeros(m, dtype=np.int64)
-    if method in _JAX_PAGELESS:
-        out = _JAX_PAGELESS[method](jnp.asarray(cols), jnp.asarray(widths))
-    else:
-        rows = jnp.asarray(_rows_in_pages(n, rpp))
-        out = _JAX_PAGED[method](jnp.asarray(cols), jnp.asarray(widths),
-                                 rows, rpp)
-    return np.asarray(out, dtype=np.int64)
+    """True when the accelerated batch kernels can run (exactly)."""
+    return HAVE_JAX
 
 
 BATCH_KERNELS: Dict[str, Callable[[np.ndarray, np.ndarray, int], np.ndarray]] \
@@ -349,7 +264,8 @@ def batched_bytes(method: str, cols: np.ndarray, widths: np.ndarray,
                   rpp: int, backend: str = "numpy") -> np.ndarray:
     """Per-row payload bytes of `method` over an (ntargets, nrows) stack."""
     if backend == "jax" and jax_batch_ready():
-        return _jax_batched_bytes(method, cols, widths, rpp)
+        from ..kernels import codec_bytes as _ck
+        return _ck.batched_codec_bytes(method, cols, widths, rpp)
     return BATCH_KERNELS[method](cols, widths, rpp)
 
 

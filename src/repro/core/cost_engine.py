@@ -31,9 +31,13 @@ vectorized pass; columns live in capacity-doubling arrays so registration is
 amortized O(statements) per index with no re-stacking.
 
 Backends: plain NumPy (default, float64, bit-compatible with the scalar
-reference) or an optional jax.jit backend for the per-step scoring kernel
-(same idioms as repro.kernels.ops: jit + CPU fallback) — useful once pools
-reach accelerator-worthy sizes.
+reference) or the unified "jax" backend resolved through `core.backend`
+(one knob for the whole advisor: AdvisorOptions(backend=...)).  Under jax
+the greedy-step scoring kernels — add-secondary, replace-clustered, and
+per-query candidate costing — run as jax.jit array kernels (same idioms
+as repro.kernels.ops).  An unavailable jax never downgrades silently:
+`core.backend.resolve` warns once per site and the engine counts the
+event in ``stats()["backend_fallbacks"]``.
 """
 from __future__ import annotations
 
@@ -43,6 +47,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import cost_model as cm
+from .backend import resolve as _resolve_backend
 from .relation import IndexDef, Predicate, Table
 from .whatif import Configuration, SizeProvider, _partial_applicable
 from .workload import BulkInsert, Query, Workload
@@ -358,34 +363,55 @@ class _TableBlock:
 
     def add_statement(self, s) -> None:
         """Append one statement row across all registered columns."""
-        if isinstance(s, Query):
-            cov, seek, ridr, scanc = self._query_row(s)
-            self.queries.append(s)
-            self._q_row[s.name] = len(self.queries) - 1
-            self.q_w = np.append(self.q_w, float(s.weight))
-            self.ncols_used = np.append(self.ncols_used,
-                                        float(len(s.all_cols())))
-            self._q_cols_set.append(frozenset(s.all_cols()))
-            self._q_filt.append({p.col: p for p in s.filters})
+        self.add_statements([s])
+
+    def add_statements(self, stmts: Sequence) -> None:
+        """Append a batch of statement rows with ONE concatenate per
+        matrix.  Each new row is a pure function of the registered columns
+        (rows never read other rows), so batching the appends is
+        bit-identical to sequential `add_statement` calls — it only
+        removes the per-statement re-stacking that dominates large
+        session deltas."""
+        qs = [s for s in stmts if isinstance(s, Query)]
+        us = [s for s in stmts if not isinstance(s, Query)]
+        if qs:
+            rows = [self._query_row(q) for q in qs]
+            base = len(self.queries)
             nc = len(self._col_pos)
+            for i, q in enumerate(qs):
+                self.queries.append(q)
+                self._q_row[q.name] = base + i
+                self._q_cols_set.append(frozenset(q.all_cols()))
+                self._q_filt.append({p.col: p for p in q.filters})
+            self.q_w = np.append(self.q_w, [float(q.weight) for q in qs])
+            self.ncols_used = np.append(
+                self.ncols_used, [float(len(q.all_cols())) for q in qs])
             self._q_has = np.concatenate(
-                [self._q_has, np.zeros((1, nc), dtype=bool)], axis=0)
+                [self._q_has, np.zeros((len(qs), nc), dtype=bool)], axis=0)
             self._q_hasf = np.concatenate(
-                [self._q_hasf, np.zeros((1, nc), dtype=bool)], axis=0)
+                [self._q_hasf, np.zeros((len(qs), nc), dtype=bool)], axis=0)
             self._q_selm = np.concatenate(
-                [self._q_selm, np.ones((1, nc))], axis=0)
-            self._fill_struct_row(len(self.queries) - 1, s)
-            self.cov = np.concatenate([self.cov, cov[None]], axis=0)
-            self.seek = np.concatenate([self.seek, seek[None]], axis=0)
-            self.ridr = np.concatenate([self.ridr, ridr[None]], axis=0)
-            self.scanc = np.concatenate([self.scanc, scanc[None]], axis=0)
-        else:
-            row = self._update_row(s)
-            self.updates.append(s)
-            self._u_row[s.name] = len(self.updates) - 1
-            self.u_w = np.append(self.u_w, float(s.weight))
-            self.u_rows = np.append(self.u_rows, float(s.nrows))
-            self.upd = np.concatenate([self.upd, row[None]], axis=0)
+                [self._q_selm, np.ones((len(qs), nc))], axis=0)
+            for i, q in enumerate(qs):
+                self._fill_struct_row(base + i, q)
+            self.cov = np.concatenate(
+                [self.cov, np.stack([r[0] for r in rows])], axis=0)
+            self.seek = np.concatenate(
+                [self.seek, np.stack([r[1] for r in rows])], axis=0)
+            self.ridr = np.concatenate(
+                [self.ridr, np.stack([r[2] for r in rows])], axis=0)
+            self.scanc = np.concatenate(
+                [self.scanc, np.stack([r[3] for r in rows])], axis=0)
+        if us:
+            rows_u = [self._update_row(u) for u in us]
+            base = len(self.updates)
+            for i, u in enumerate(us):
+                self.updates.append(u)
+                self._u_row[u.name] = base + i
+            self.u_w = np.append(self.u_w, [float(u.weight) for u in us])
+            self.u_rows = np.append(self.u_rows,
+                                    [float(u.nrows) for u in us])
+            self.upd = np.concatenate([self.upd, np.stack(rows_u)], axis=0)
 
     def remove_statements(self, names) -> int:
         """Drop the rows of the named statements (no recomputation; the
@@ -480,6 +506,57 @@ if HAVE_JAX:
         new_q = jnp.minimum(cur_q[:, None], path)
         return q_w @ new_q
 
+    @jax.jit
+    def _jax_score_replace(scanc_c, cov, seek, ridr, size_c, beta_c,
+                           ncols_used, q_w):
+        """Clustered-replacement scoring: every secondary path under every
+        candidate clustered layout.  scanc_c (nq, m) candidate scan costs;
+        cov/seek/ridr (nq, ns) the kept-secondary rows; size_c/beta_c (m,)
+        the candidate layouts' RID coupling."""
+        npages = jnp.maximum(size_c, 0.0) / cm.PAGE_BYTES           # (m,)
+        rid = (cm.T_IO_RAND * jnp.minimum(ridr[:, :, None], npages)
+               + cm.CPU_ROW * ridr[:, :, None]
+               + beta_c * ridr[:, :, None] * ncols_used[:, None, None])
+        path = jnp.minimum(cov[:, :, None], seek[:, :, None] + rid)
+        new_q = jnp.minimum(scanc_c, jnp.min(path, axis=1))
+        return q_w @ new_q
+
+    @jax.jit
+    def _jax_cand_costs(scan_l, cov_s, seek_s, ridr_s, size_l, beta_l,
+                        cov_k, seek_k, ridr_k, size_c, beta_c, ncq,
+                        is_sec):
+        """Per-query candidate costing (one query row, m candidates).
+        Each candidate k is scored under its own layout L_k (the current
+        clustered layout for secondary candidates, the candidate itself
+        for clustered ones): min(scan under L_k, best base-secondary path
+        under L_k, own path under the current layout when secondary)."""
+        npag_l = jnp.maximum(size_l, 0.0) / cm.PAGE_BYTES           # (m,)
+        rid_sl = (cm.T_IO_RAND * jnp.minimum(ridr_s[:, None], npag_l)
+                  + cm.CPU_ROW * ridr_s[:, None]
+                  + beta_l * ridr_s[:, None] * ncq)                 # (ns, m)
+        base_path = jnp.min(
+            jnp.minimum(cov_s[:, None], seek_s[:, None] + rid_sl),
+            axis=0, initial=jnp.inf)                                # (m,)
+        npag_c = jnp.maximum(size_c, 0.0) / cm.PAGE_BYTES
+        rid_k = (cm.T_IO_RAND * jnp.minimum(ridr_k, npag_c)
+                 + cm.CPU_ROW * ridr_k + beta_c * ridr_k * ncq)     # (m,)
+        own = jnp.where(is_sec, jnp.minimum(cov_k, seek_k + rid_k),
+                        jnp.inf)
+        return jnp.minimum(jnp.minimum(scan_l, base_path), own)
+
+    @jax.jit
+    def _jax_cand_costs_stacked(scan_l, cov, seek, ridr, size_c, beta_c,
+                                ncq, is_sec):
+        """Cross-job stacked twin of `_jax_cand_costs` for secondary-free
+        bases (the fleet COST-phase prefetch): the same per-element
+        float32 op sequence, so a job scored inside a fleet batch equals
+        the per-job kernel's output bitwise."""
+        npag = jnp.maximum(size_c, 0.0) / cm.PAGE_BYTES             # (J,1)
+        rid = (cm.T_IO_RAND * jnp.minimum(ridr, npag)
+               + cm.CPU_ROW * ridr + beta_c * ridr * ncq)           # (J,m)
+        own = jnp.where(is_sec, jnp.minimum(cov, seek + rid), jnp.inf)
+        return jnp.minimum(scan_l, own)
+
 
 class CostEngine:
     """Batched what-if engine over a workload and a SizeProvider.
@@ -491,11 +568,9 @@ class CostEngine:
 
     def __init__(self, workload: Workload, sizes: SizeProvider,
                  backend: str = "numpy"):
-        if backend not in ("numpy", "jax"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if backend == "jax" and not HAVE_JAX:
-            backend = "numpy"
-        self.backend = backend
+        self.backend, fell_back = _resolve_backend(backend,
+                                                   site="cost_engine")
+        self.backend_fallbacks = int(fell_back)
         self.workload = workload
         self.sizes = sizes
         self.blocks: Dict[str, _TableBlock] = {}
@@ -510,6 +585,14 @@ class CostEngine:
         self.rows_added = 0       # statement rows appended incrementally
         self.rows_removed = 0     # statement rows dropped incrementally
         self.cols_refreshed = 0   # columns refilled after size changes
+
+    def stats(self) -> Dict[str, int]:
+        return {"config_evals": self.config_evals,
+                "batch_scores": self.batch_scores,
+                "rows_added": self.rows_added,
+                "rows_removed": self.rows_removed,
+                "cols_refreshed": self.cols_refreshed,
+                "backend_fallbacks": self.backend_fallbacks}
 
     # -- registration ----------------------------------------------------
     def register(self, idxs: Iterable[IndexDef]) -> np.ndarray:
@@ -539,9 +622,12 @@ class CostEngine:
             if not any(blk.reweight(name, float(w))
                        for blk in self.blocks.values()):
                 raise KeyError(f"cannot reweight unknown statement {name!r}")
+        by_table: Dict[str, list] = {}
         for s in delta.added:
-            self.blocks[s.table].add_statement(s)
-            self.rows_added += 1
+            by_table.setdefault(s.table, []).append(s)
+        for table, stmts in by_table.items():
+            self.blocks[table].add_statements(stmts)
+            self.rows_added += len(stmts)
 
     def sync_sizes(self) -> int:
         """Refill columns whose registered size changed since they were
@@ -614,6 +700,18 @@ class CostEngine:
                                      ncols_used=ncq, beta_coef=blk.beta[c])
             return np.minimum(blk.cov[qi, ids], blk.seek[qi, ids] + rid)
 
+        if self.backend == "jax" and len(cands):
+            ids = np.array([blk.id_of(i) for i in cands], dtype=np.int64)
+            is_sec = np.array([not i.clustered for i in cands])
+            cl_ids = np.where(is_sec, c_id, ids)  # layout each k runs under
+            sids = np.array(sec_ids, dtype=np.int64)
+            return np.asarray(_jax_cand_costs(
+                blk.scanc[qi, cl_ids], blk.cov[qi, sids],
+                blk.seek[qi, sids], blk.ridr[qi, sids], blk.size[cl_ids],
+                blk.beta[cl_ids], blk.cov[qi, ids], blk.seek[qi, ids],
+                blk.ridr[qi, ids], blk.size[c_id], blk.beta[c_id],
+                ncq, is_sec), dtype=np.float64)
+
         base_q = blk.scanc[qi, c_id]
         if sec_ids:
             base_q = min(base_q, float(row_paths(sec_ids, c_id).min()))
@@ -632,6 +730,33 @@ class CostEngine:
                 c = min(c, float(row_paths(sec_ids, cid2).min()))
             out[k] = c
         return out
+
+    def cost_job_arrays(self, query: Query, base: Configuration,
+                        cands: Sequence[IndexDef]) -> Dict[str, object]:
+        """Gather one (query, base, candidates) costing job as flat
+        per-candidate arrays for cross-job stacking — the fleet service's
+        COST-phase prefetch.  Requires a secondary-free `base` (the
+        advisor's `base_configuration`), which makes the job purely
+        elementwise; `batched_candidate_costs` then scores many jobs at
+        once with exactly the per-job `candidate_query_costs` arithmetic."""
+        table = query.table
+        blk = self.blocks[table]
+        self.register(cands)
+        c_id, sec_ids = self.split(base, table)
+        if sec_ids:
+            raise ValueError("cost_job_arrays requires a secondary-free "
+                             "base configuration")
+        qi = blk.query_row(query)
+        ids = np.array([blk.id_of(i) for i in cands], dtype=np.int64)
+        is_sec = np.array([not i.clustered for i in cands])
+        cl_ids = np.where(is_sec, c_id, ids)  # layout each k runs under
+        return {
+            "scan_l": blk.scanc[qi, cl_ids], "cov": blk.cov[qi, ids],
+            "seek": blk.seek[qi, ids], "ridr": blk.ridr[qi, ids],
+            "size_c": float(blk.size[c_id]),
+            "beta_c": float(blk.beta[c_id]),
+            "ncq": float(blk.ncols_used[qi]), "is_sec": is_sec,
+        }
 
     # -- greedy-step scoring ---------------------------------------------
     def score_add_secondary(self, table: str, c_id: int, cur_q: np.ndarray,
@@ -671,17 +796,25 @@ class CostEngine:
         cids = list(cand_ids)
         sids = list(sec_ids)
         if blk.queries:
-            new_q = blk.scanc[:, cids]                      # (nq, m)
-            if sids:
-                # (nq, ns, m): every secondary path under every new layout
-                rid = cm.rid_lookup_cost(
-                    blk.ridr[:, sids, None], blk.size[cids],
-                    ncols_used=blk.ncols_used[:, None, None],
-                    beta_coef=blk.beta[cids])
-                path = np.minimum(blk.cov[:, sids, None],
-                                  blk.seek[:, sids, None] + rid)
-                new_q = np.minimum(new_q, path.min(axis=1))
-            q_tot = blk.q_w @ new_q
+            if self.backend == "jax" and sids:
+                q_tot = np.asarray(_jax_score_replace(
+                    blk.scanc[:, cids], blk.cov[:, sids],
+                    blk.seek[:, sids], blk.ridr[:, sids], blk.size[cids],
+                    blk.beta[cids], blk.ncols_used, blk.q_w),
+                    dtype=np.float64)
+            else:
+                new_q = blk.scanc[:, cids]                  # (nq, m)
+                if sids:
+                    # (nq, ns, m): every secondary path under every new
+                    # layout
+                    rid = cm.rid_lookup_cost(
+                        blk.ridr[:, sids, None], blk.size[cids],
+                        ncols_used=blk.ncols_used[:, None, None],
+                        beta_coef=blk.beta[cids])
+                    path = np.minimum(blk.cov[:, sids, None],
+                                      blk.seek[:, sids, None] + rid)
+                    new_q = np.minimum(new_q, path.min(axis=1))
+                q_tot = blk.q_w @ new_q
         else:
             q_tot = np.zeros(len(cids))
         if blk.updates:
@@ -724,3 +857,50 @@ def chunked_config_costs(workload: Workload, sizes: SizeProvider,
         for k, cfg in enumerate(configs):
             totals[k] += eng.config_cost(cfg)
     return totals
+
+
+# ---------------------------------------------------------------------------
+# Cross-tenant stacked candidate costing (the fleet COST-phase prefetch)
+# ---------------------------------------------------------------------------
+
+def batched_candidate_costs(jobs: Sequence[Dict[str, object]],
+                            backend: str = "numpy") -> np.ndarray:
+    """Score many `CostEngine.cost_job_arrays` jobs in one stacked
+    (job x candidate) pass.
+
+    Per element this is EXACTLY the `candidate_query_costs` arithmetic
+    for a secondary-free base — the same `cm.rid_lookup_cost` ufunc
+    sequence on the numpy backend (bitwise), the same jit'd float32 op
+    sequence on jax (`_jax_cand_costs_stacked`) — so a tenant whose
+    costs were prefetched in a fleet batch recommends exactly what it
+    would have recommended scoring alone.  Returns a (len(jobs), max_m)
+    array; row i's first len(jobs[i]["cov"]) entries are live, the pad
+    tail is meaningless.
+    """
+    J = len(jobs)
+    m = max((len(j["cov"]) for j in jobs), default=0)
+    if not J or not m:
+        return np.zeros((J, m))
+
+    def stack(key, fill):
+        out = np.full((J, m), fill)
+        for i, j in enumerate(jobs):
+            out[i, :len(j[key])] = j[key]
+        return out
+
+    scan_l = stack("scan_l", 0.0)
+    cov = stack("cov", np.inf)
+    seek = stack("seek", np.inf)
+    ridr = stack("ridr", 0.0)
+    is_sec = stack("is_sec", False)
+    size_c = np.array([j["size_c"] for j in jobs])[:, None]
+    beta_c = np.array([j["beta_c"] for j in jobs])[:, None]
+    ncq = np.array([j["ncq"] for j in jobs])[:, None]
+    if backend == "jax" and HAVE_JAX:
+        return np.asarray(_jax_cand_costs_stacked(
+            scan_l, cov, seek, ridr, size_c, beta_c, ncq, is_sec),
+            dtype=np.float64)
+    rid = cm.rid_lookup_cost(ridr, size_c, ncols_used=ncq,
+                             beta_coef=beta_c)
+    own = np.where(is_sec, np.minimum(cov, seek + rid), np.inf)
+    return np.minimum(scan_l, own)

@@ -76,17 +76,22 @@ def greedy_enumerate(optimizer: WhatIfOptimizer, sizes: SizeProvider,
                      budget_bytes: float, variant: str = "backtrack",
                      max_indexes: int = 64,
                      engine: Optional[CostEngine] = None,
-                     score_chunk_cells: int = 1 << 22) -> EnumerationResult:
+                     score_chunk_cells: int = 1 << 22,
+                     backend: str = "numpy") -> EnumerationResult:
     """Engine-backed hierarchical greedy: candidates are partitioned by
     table, a step re-scores only the partitions its chosen index touched
     (the `stale` set), and each partition's vectorized scoring runs in
     candidate chunks of at most `score_chunk_cells` matrix cells — so the
     peak scratch allocation stays bounded on large workloads.  Chunking is
     value-neutral: every candidate column is scored independently, so the
-    results are bit-identical to one monolithic scoring call."""
+    results are bit-identical to one monolithic scoring call.
+
+    `backend` selects the accelerator for a fallback-constructed engine
+    (the unified knob, resolved via `core.backend`); a caller-supplied
+    `engine` keeps its own backend."""
     assert variant in ("pure", "density", "backtrack")
     if engine is None:
-        engine = CostEngine(optimizer.workload, sizes)
+        engine = CostEngine(optimizer.workload, sizes, backend=backend)
     pool = list(pool)
     engine.register(base.indexes)
 

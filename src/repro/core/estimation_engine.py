@@ -31,8 +31,9 @@ Concretely, per (table, f) group the engine:
    reuses it for every shorter prefix it extends;
 3. stacks the permuted columns into (ntargets, nrows) matrices grouped by
    (method, rows-per-page) and sizes them with the `*_bytes_batch` kernels
-   of `repro.core.compression` (NumPy, or the jax.jit backend mirroring
-   `CostEngine(backend="jax")`);
+   of `repro.core.compression` (NumPy, or — under the unified
+   `backend="jax"` of repro.core.backend — the bit-identical Pallas
+   segment-reduce kernels in repro.kernels.codec_bytes);
 4. assembles per-target compressed bytes, applies the same bias
    correction (`errors.samplecf_bias`) and full-table scaling as
    `sample_cf`, and returns `SizeEstimate`s that match the scalar path
@@ -49,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import compression, distinct, errors
+from .backend import resolve as _resolve
 from .relation import IndexDef, Table, rows_per_page, uncompressed_pages
 from .samplecf import SampleManager, SizeEstimate
 
@@ -57,11 +59,8 @@ TargetSpec = Tuple[Tuple[str, ...], Optional[str]]
 
 
 def _resolve_backend(backend: str) -> str:
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend == "jax" and not compression.jax_batch_ready():
-        return "numpy"
-    return backend
+    # kept for backwards compatibility; warns + downgrades via core.backend
+    return _resolve(backend, site="estimation_engine")[0]
 
 
 def _prefix_permutations(sample: Table,
@@ -296,13 +295,19 @@ class EstimationEngine:
         self.tables = dict(tables)
         self.manager = manager if manager is not None else \
             SampleManager(self.tables, seed=seed)
-        self.backend = _resolve_backend(backend)
+        self.backend, fell_back = _resolve(backend, site="estimation_engine")
         # optional faults.FaultInjector; site "estimation" fires a
         # transient FaultError before any sampling work happens, so a
         # faulted batch is cleanly retryable
         self.faults = faults
         self.batch_calls = 0        # per-(table, f) group batches run
         self.targets_estimated = 0  # total targets sized through the engine
+        self.backend_fallbacks = int(fell_back)  # jax requested, numpy ran
+
+    def stats(self) -> Dict[str, int]:
+        return {"batch_calls": self.batch_calls,
+                "targets_estimated": self.targets_estimated,
+                "backend_fallbacks": self.backend_fallbacks}
 
     def estimate_batch(self, targets: Sequence, f: float,
                        bias_correct: bool = True) -> Dict:

@@ -41,11 +41,20 @@ deductions, same `total_cost`, for every f — asserted in
 tests/test_core_estimation.py, tests/test_estimation_engine.py and in
 benchmarks/estimation_scaling.py.
 
-An optional jax.jit scoring backend (`PlannerEngine(backend="jax")`,
-mirroring `CostEngine(backend="jax")` / `estimation_backend="jax"`) swaps
-the erf evaluation for a jitted `jax.scipy.special.erf`; it is gated on
-jax + x64 availability and is NOT bit-parity (jax's erf is a different
-polynomial) — the NumPy backend is the parity reference.
+Backend architecture (see repro.core.backend): under the unified
+`backend="jax"` the candidate-scoring step runs through the Pallas
+kernels in repro.kernels.planner_score — `fused_score` fuses the Goodman
+fold, the deduction-error continuation and the masked accuracy
+probability of a whole (candidate x f) record into one float32 kernel,
+and `prob_within` is the matching probability stage used by the memoized
+`_prob_cached` path (feasibility, replay verification).  Both kernels
+share one probability op sequence, so a probability recomputed from a
+stored (mean, std) pair — buf values are float32-exact once written — is
+bit-identical to the fused in-line value: replay, `_verify_changed` and
+session-vs-fresh plan equality stay exact WITHIN the jax backend.  The
+jax backend is NOT bit-parity with numpy (a different erf, float32
+arithmetic); the NumPy backend remains the parity reference against the
+scalar planner.
 """
 from __future__ import annotations
 
@@ -55,21 +64,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import errors as err
-from .compression import METHODS, jax_batch_ready
+from .backend import resolve as _resolve_backend
+from .compression import METHODS
 from .estimation_graph import (Deduction, F_GRID, Node, NodeKey, Plan, State,
                                _colext_deductions, _colset_ded,
                                memoized_sampling_cost)
-
-try:  # optional accelerator backend (repro.kernels idiom: gate, don't require)
-    import jax
-    import jax.numpy as jnp
-    from jax.scipy.special import erf as _jax_erf
-    HAVE_JAX = True
-except Exception:  # pragma: no cover - jax is baked into the image
-    jax = None
-    jnp = None
-    _jax_erf = None
-    HAVE_JAX = False
 
 # state codes (match estimation_graph.State member order)
 _NONE, _DEDUCED, _SAMPLED, _EXACT = 0, 1, 2, 3
@@ -196,11 +195,9 @@ class PlannerEngine:
                  scost_memo: Optional[Dict] = None, record: bool = True,
                  max_nodes: Optional[int] = None,
                  max_replay: Optional[int] = None, faults=None):
-        if backend not in ("numpy", "jax"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if backend == "jax" and not (HAVE_JAX and jax_batch_ready()):
-            backend = "numpy"
-        self.backend = backend
+        self.backend, fell_back = _resolve_backend(backend,
+                                                   site="planner_engine")
+        self.backend_fallbacks = int(fell_back)  # jax requested, numpy ran
         # record per-target decisions for cross-run replay (the online-
         # session regime).  One-shot throwaway engines pass record=False
         # and skip the bookkeeping entirely.
@@ -426,24 +423,51 @@ class PlannerEngine:
         return memoized_sampling_cost(self.tables, self._scost, key, f)
 
     # ------------------------------------------------------------------
-    # Scoring backend (vectorized erf)
+    # Scoring backend (probability + fused candidate scoring)
     # ------------------------------------------------------------------
-    def _erf(self, x: np.ndarray) -> np.ndarray:
-        """jax backend: jitted erf, padded to pow2 lengths to bound the
-        number of compiled shapes.  Not bit-parity with math.erf."""
-        n = x.shape[0]
-        if n == 0:
-            return x
-        m = 1 << max(int(n - 1).bit_length(), 0)
-        xp = np.zeros(m)
-        xp[:n] = x
-        return np.asarray(_jax_erf(jnp.asarray(xp)), dtype=np.float64)[:n]
-
     def _prob(self, means: np.ndarray, stds: np.ndarray,
               e: float) -> np.ndarray:
         if self.backend == "jax":
-            return err.prob_within_batch(means, stds, e, erf=self._erf)
+            from ..kernels import planner_score as _ps
+            return _ps.prob_within(means, stds, e)
         return err.prob_within_batch(means, stds, e)
+
+    def _jax_score(self, rec: _TargetRec, m_s, s_s, m_x, s_x,
+                   mask67: np.ndarray, pre9, extra, e: float,
+                   q: float) -> tuple:
+        """jax backend: score one record's whole (candidate, child, f)
+        stack with the fused Pallas kernel.  ColSet candidates sit at
+        k=0 with EXACT pads after them — folding exact (1, 0) factors is
+        the float32 multiplicative identity, so the packed stack scores
+        bit-identically to per-block kernel calls (the property
+        `_verify_changed` relies on when it re-scores inserted mates
+        alone).  Returns (cm, cs, p): float32 values in float64 arrays,
+        p masked to mask67|pre9 exactly like the numpy path."""
+        from ..kernels import planner_score as _ps
+        nc, nf = mask67.shape
+        ncs = rec.ncs
+        kmax = m_x.shape[1] if m_x is not None else 1
+        m = np.ones((nc, kmax, nf))
+        s = np.zeros((nc, kmax, nf))
+        dm = np.empty((nc, 1))
+        vt = np.empty((nc, 1))
+        mq = np.empty((nc, 1))
+        cs_dm, cs_msq, cs_vt = self._cs_fac
+        if m_s is not None:
+            m[:ncs, 0, :] = m_s
+            s[:ncs, 0, :] = s_s
+        dm[:ncs] = cs_dm
+        vt[:ncs] = cs_vt
+        mq[:ncs] = cs_msq
+        if m_x is not None:
+            m[ncs:] = m_x
+            s[ncs:] = s_x
+            dm[ncs:] = rec.cx_dm
+            vt[ncs:] = rec.cx_vterm
+            mq[ncs:] = rec.cx_msq
+        cm, cs, p, _, _ = _ps.fused_score(m, s, dm, vt, mq, mask67, pre9,
+                                          extra, e, q)
+        return cm, cs, p
 
     def _prob_cached(self, means: np.ndarray, stds: np.ndarray,
                      e: float) -> np.ndarray:
@@ -663,18 +687,29 @@ class PlannerEngine:
                 m_a = np.where(known, m_a, samp_mean[rec.kind])
                 s_a = np.where(known, s_a, samp_std[rec.kind])
             cs_dm, cs_msq, cs_vt = self._cs_fac
-            msq = m_a * m_a
-            cm_a = m_a * cs_dm
-            v_a = (s_a * s_a + msq) * cs_vt
-            e2_a = msq * cs_msq
-            std_a = np.sqrt(np.maximum(v_a - e2_a, 0.0))
             elig67 = known & act              # single child: allk == known
             pre9 = ~known & (app[:, 3, :] < scost[rec.tid]) & act
-            maskp = elig67 | pre9
-            p = np.zeros((nins, nf))
-            ii = maskp.nonzero()
-            if ii[0].size:
-                p[ii] = self._prob_cached(cm_a[ii], std_a[ii], e)
+            if self.backend == "jax":
+                # same fused float32 op sequence as the run that recorded
+                # the decision — the EXACT (1, 0) K-pads of the recorded
+                # run are the exact multiplicative identity, so this K=1
+                # fold is bitwise what the full stack produced
+                from ..kernels import planner_score as _ps
+                _, _, p, _, _ = _ps.fused_score(
+                    m_a[:, None, :], s_a[:, None, :],
+                    np.full((nins, 1), cs_dm), np.full((nins, 1), cs_vt),
+                    np.full((nins, 1), cs_msq), elig67, pre9, None, e, q)
+            else:
+                msq = m_a * m_a
+                cm_a = m_a * cs_dm
+                v_a = (s_a * s_a + msq) * cs_vt
+                e2_a = msq * cs_msq
+                std_a = np.sqrt(np.maximum(v_a - e2_a, 0.0))
+                maskp = elig67 | pre9
+                p = np.zeros((nins, nf))
+                ii = maskp.nonzero()
+                if ii[0].size:
+                    p[ii] = self._prob_cached(cm_a[ii], std_a[ii], e)
             sat = p >= q
             pos_of = {int(v): i for i, v in enumerate(new_ids)}
         b9 = set(rr.child_w[1].tolist()) if rr.child_w is not None else ()
@@ -872,7 +907,7 @@ class PlannerEngine:
                 allk = self._concat(known_s, allk_x)   # (nc, nf)
                 any_unknown = not allk.all()
                 cs_dm, cs_msq, cs_vt = self._cs_fac
-                cmA = vA = e2A = None
+                m_s = s_s = m_x = s_x = None
                 if chs is not None:
                     m_s = chs[:, 1, :]
                     s_s = chs[:, 2, :]
@@ -882,28 +917,33 @@ class PlannerEngine:
                         # one Table 2 error fit per record)
                         m_s = np.where(known_s, m_s, samp_mean[kc])
                         s_s = np.where(known_s, s_s, samp_std[kc])
-                    msq_s = m_s * m_s
-                    cmA = m_s * cs_dm
-                    vA = (s_s * s_s + msq_s) * cs_vt
-                    e2A = msq_s * cs_msq
-                cmB = vB = e2B = None
                 if chx is not None:
                     m_x = chx[:, :, 1, :]
                     s_x = chx[:, :, 2, :]
                     if any_unknown:
                         m_x = np.where(known_x, m_x, samp_mean[kc])
                         s_x = np.where(known_x, s_x, samp_std[kc])
-                    # Goodman fold over the children axis, continued with
-                    # the deduction-error factor — bit-identical to the
-                    # scalar compose (children in order, deduction last)
-                    cmB, vB, e2B = err.goodman_fold(m_x, s_x, axis=1)
-                    cmB = cmB * rec.cx_dm
-                    vB = vB * rec.cx_vterm
-                    e2B = e2B * rec.cx_msq
-                cm = self._concat(cmA, cmB)
-                v = self._concat(vA, vB)
-                e2 = self._concat(e2A, e2B)
-                cs = np.sqrt(np.maximum(v - e2, 0.0))
+                if self.backend != "jax":
+                    cmA = vA = e2A = None
+                    if chs is not None:
+                        msq_s = m_s * m_s
+                        cmA = m_s * cs_dm
+                        vA = (s_s * s_s + msq_s) * cs_vt
+                        e2A = msq_s * cs_msq
+                    cmB = vB = e2B = None
+                    if chx is not None:
+                        # Goodman fold over the children axis, continued
+                        # with the deduction-error factor — bit-identical
+                        # to the scalar compose (children in order,
+                        # deduction last)
+                        cmB, vB, e2B = err.goodman_fold(m_x, s_x, axis=1)
+                        cmB = cmB * rec.cx_dm
+                        vB = vB * rec.cx_vterm
+                        e2B = e2B * rec.cx_msq
+                    cm = self._concat(cmA, cmB)
+                    v = self._concat(vA, vB)
+                    e2 = self._concat(e2A, e2B)
+                    cs = np.sqrt(np.maximum(v - e2, 0.0))
 
                 mask67 = allk & act
                 if any_unknown:
@@ -926,11 +966,20 @@ class PlannerEngine:
                     pre9 = None
                     mask_p = mask67
 
-                # one probability pass over both phases' eligible entries
-                p = np.zeros((nc, nf))
-                ii = mask_p.nonzero()
-                if ii[0].size:
-                    p[ii] = self._prob_cached(cm[ii], cs[ii], e)
+                if self.backend == "jax":
+                    # fused Pallas kernel: compose + masked probability in
+                    # one pass (winner selection stays on the host; p is
+                    # float32-exact so argmax over it agrees)
+                    cm, cs, p = self._jax_score(
+                        rec, m_s, s_s, m_x, s_x, mask67, pre9,
+                        extra if any_unknown else None, e, q)
+                else:
+                    # one probability pass over both phases' eligible
+                    # entries
+                    p = np.zeros((nc, nf))
+                    ii = mask_p.nonzero()
+                    if ii[0].size:
+                        p[ii] = self._prob_cached(cm[ii], cs[ii], e)
                 sat = p >= q
 
                 # ---- lines 6-7: an enabled deduction satisfying (e, q) --

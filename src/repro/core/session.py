@@ -21,7 +21,12 @@ proportional to the workload *delta*:
   sampled.
 * **What-if costing** — the persistent `CostEngine` appends/drops
   statement rows and refreshes only columns whose registered size changed
-  (`apply_delta` / `sync_sizes`) instead of rebuilding its matrices.
+  (`apply_delta` / `sync_sizes`) instead of rebuilding its matrices; the
+  engine honors the unified `AdvisorOptions(backend=...)` knob, and the
+  fleet can prefetch candidate costs across tenants via
+  `peek_cost_jobs` / `accept_cost_results` (keyed by workload_version,
+  consumed verbatim by the next `recommend` — bit-identical to costing
+  in-line).
 * **Selection** — per-query skyline/top-k selections are reused unless a
   delta re-sized one of the query's candidates (checked against the set
   of re-registered index keys).
@@ -151,6 +156,10 @@ class AdvisorSession:
         # the peek_estimation_plan() memo below
         self.workload_version = 0
         self._peeked = None
+        # peeked estimation result + prefetched candidate costs, both
+        # keyed by workload_version (the fleet's COST-phase prefetch)
+        self._peeked_est = None
+        self._cost_results = None
         if self._compressed_mode:
             # outer mode: keep only O(delta) cluster membership here and
             # delegate the heavy pipeline to an inner session over the
@@ -202,6 +211,7 @@ class AdvisorSession:
         self.samplecf_cache_misses = 0
         self.selection_hits = 0
         self.selection_misses = 0
+        self.cost_prefetch_consumed = 0
 
     def _new_sampled_cache(self, sampled_cache):
         """The session's (NodeKey, f) SampleCF cache: the caller's shared
@@ -287,6 +297,8 @@ class AdvisorSession:
         new_wl = self.workload.apply_delta(delta)
         self.workload_version += 1
         self._peeked = None
+        self._peeked_est = None
+        self._cost_results = None
         if self._compressed_mode:
             # O(delta) cluster-membership maintenance; the inner session
             # catches up lazily at the next recommend()
@@ -424,6 +436,50 @@ class AdvisorSession:
         tkey_to_defs, plan = self._plan_targets(universe[2])
         self._peeked = (self.workload_version, universe, tkey_to_defs, plan)
         return plan
+
+    def peek_cost_jobs(self) -> List[Tuple[Query, List[IndexDef]]]:
+        """Expose this round's stale per-query costing jobs WITHOUT
+        scoring them — the fleet service's COST-phase prefetch hook.
+
+        Runs the estimation stage once (memoized by `workload_version`
+        and consumed verbatim by the next `recommend()`; size
+        registration is idempotent, so a later retry re-registers the
+        same values) and syncs the engine, so the returned (query,
+        expanded-candidates) jobs can be gathered from live engine
+        columns by `CostEngine.cost_job_arrays`.  The selection-staleness
+        test is the same one `recommend()` applies, against the same
+        `changed` set.  Returns [] in compressed (outer) mode and when
+        the session has no batched engine."""
+        if self._compressed_mode or self.engine is None:
+            return []
+        self.peek_estimation_plan()
+        ver, universe, tkey_to_defs, plan = self._peeked
+        if self._peeked_est is None or self._peeked_est[0] != ver:
+            est = self._estimate_sizes(universe[2], (tkey_to_defs, plan))
+            self._peeked_est = (ver, est)
+        changed = self._peeked_est[1][4]
+        self.engine.sync_sizes()
+        jobs: List[Tuple[Query, List[IndexDef]]] = []
+        for q in self.workload.queries():
+            entry = self._queries[q.name]
+            sel = self._selections.get(q.name)
+            if sel is None or (changed
+                               and not changed.isdisjoint(entry.key_set)):
+                jobs.append((q, entry.exp))
+        return jobs
+
+    def accept_cost_results(self, version: int,
+                            results: Mapping[str, "object"]) -> int:
+        """Install prefetched candidate-cost arrays, keyed by query name
+        and aligned with the `peek_cost_jobs()` candidate lists, for
+        workload `version`.  A stale version is dropped (returns 0).
+        The caller owns the exact-parity contract: each array must hold
+        exactly what `engine.candidate_query_costs` would return for
+        that job, so consuming it cannot perturb the recommendation."""
+        if version != self.workload_version:
+            return 0
+        self._cost_results = (version, dict(results))
+        return len(results)
 
     def _estimate_sizes(self, raw_union: List[IndexDef],
                         planned: Optional[Tuple[Dict[NodeKey,
@@ -563,8 +619,15 @@ class AdvisorSession:
             per_query_exp, merged_all, raw_union = self._candidate_universe()
             planned = None
         self._peeked = None
-        est_cost, plan, n_s, n_d, changed = self._estimate_sizes(
-            raw_union, planned)
+        est_state, self._peeked_est = self._peeked_est, None
+        if est_state is not None and est_state[0] == self.workload_version:
+            # estimation already ran inside peek_cost_jobs() for this
+            # exact workload version: sizes are registered and the
+            # engine is synced (both idempotent), so reuse its result
+            est_cost, plan, n_s, n_d, changed = est_state[1]
+        else:
+            est_cost, plan, n_s, n_d, changed = self._estimate_sizes(
+                raw_union, planned)
 
         if self.faults is not None:
             # size registration above is idempotent, so a fault here is
@@ -580,6 +643,9 @@ class AdvisorSession:
         base_cost = (engine.config_cost(base) if engine is not None
                      else self.optimizer.workload_cost(base))
 
+        pre, self._cost_results = self._cost_results, None
+        pre_costs = (pre[1] if pre is not None
+                     and pre[0] == self.workload_version else {})
         pool: Dict[Tuple, IndexDef] = {}
         n_cand = 0
         for q in self.workload.queries():
@@ -587,9 +653,13 @@ class AdvisorSession:
             sel = self._selections.get(q.name)
             if sel is None or (changed
                                and not changed.isdisjoint(entry.key_set)):
+                pre_q = pre_costs.get(q.name)
+                if pre_q is not None:
+                    self.cost_prefetch_consumed += 1
                 costed = cand.cost_candidates(q, entry.exp, base,
                                               self.optimizer, self.sizes,
-                                              engine=engine)
+                                              engine=engine,
+                                              precomputed=pre_q)
                 sel = _Selection(select_candidates(costed, self.opt),
                                  len(costed))
                 self._selections[q.name] = sel
@@ -631,6 +701,7 @@ class AdvisorSession:
             "rounds": self.rounds,
             "selection_hits": self.selection_hits,
             "selection_misses": self.selection_misses,
+            "cost_prefetch_consumed": self.cost_prefetch_consumed,
             "samplecf_cache_hits": self.samplecf_cache_hits,
             "samplecf_cache_misses": self.samplecf_cache_misses,
             "sampled_estimates_cached": len(self._sampled_est),

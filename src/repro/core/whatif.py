@@ -224,21 +224,29 @@ class WhatIfOptimizer:
         return sum(s.weight * self.statement_cost(s, config)
                    for s in self.workload.statements)
 
-    def engine(self, backend: str = "numpy"):
+    def engine(self, backend: Optional[str] = None):
         """The batched cost engine bound to this optimizer's sizes.
 
         Built lazily so every size registered on the SizeProvider *before*
         the first batched call is picked up.  Sizes registered afterwards
         are not reflected (the scalar cache has the same staleness rule).
+
+        `backend=None` (the default, and what internal callers such as
+        `workload_cost_batch` pass) reuses whatever engine exists, building
+        a numpy one if none does.  An explicit backend that differs from
+        the current engine's resolved backend REBUILDS the engine from the
+        provider's current sizes — switching is a fresh build, never an
+        error (registered columns and statement deltas do not carry over).
         """
+        from .cost_engine import CostEngine  # deferred: avoids cycle
         if self._engine is None:
-            from .cost_engine import CostEngine  # deferred: avoids cycle
             self._engine = CostEngine(self.workload, self.sizes,
-                                      backend=backend)
-        elif self._engine.backend != backend:
-            raise ValueError(
-                f"engine already built with backend "
-                f"{self._engine.backend!r}; cannot switch to {backend!r}")
+                                      backend=backend or "numpy")
+        elif backend is not None:
+            from .backend import resolve as _resolve
+            if self._engine.backend != _resolve(backend)[0]:
+                self._engine = CostEngine(self.workload, self.sizes,
+                                          backend=backend)
         return self._engine
 
     def workload_cost_batch(self, configs: Iterable[Configuration]):

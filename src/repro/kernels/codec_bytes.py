@@ -1,0 +1,272 @@
+"""Pallas segment-reduce kernels for the batched codec-size estimators.
+
+These kernels accelerate `repro.core.compression.batched_bytes` — the
+(targets x rows) column stacks that SampleCF and the estimation engine feed
+through the five codec size formulas (NS / GDICT / LDICT / PREFIX / RLE).
+Each kernel is a segment reduce: per target row, reduce the row (NS, GDICT)
+or the (npages, rows_per_page) page grid (LDICT, PREFIX, RLE) down to one
+payload-byte count.
+
+int32-safe rescaling (the old jax path was gated on x64 being enabled;
+these kernels remove that gate):
+
+* Values are split into two uint32 planes ``hi = v >> 32``, ``lo = v & M32``
+  of the uint64 view of the input.  The split is a bijection, so every
+  primitive the codecs need factors exactly through the planes:
+  - equality / adjacent-difference: ``a == b  <=>  a_hi == b_hi and
+    a_lo == b_lo`` (GDICT/LDICT ndv counts, RLE run counts);
+  - unsigned order: lexicographic (hi, lo) order equals uint64 order, so
+    ``jax.lax.sort((hi, lo), num_keys=2)`` sorts exactly like the NumPy
+    reference's int64 sort for non-negative inputs, and the PREFIX page
+    min/max decompose as ``mn_hi = min(hi)``,
+    ``mn_lo = min(lo where hi == mn_hi)`` (dually for max, xor per plane);
+  - significant_bytes: ``sig(v) = 4 + sig32(hi)`` if ``hi != 0`` else
+    ``sig32(lo)`` with ``sig32(u) = 1 + [u>=2^8] + [u>=2^16] + [u>=2^24]``.
+* All byte-count arithmetic is then small-integer: with widths <= 8 every
+  per-row/per-page term is <= ``rows * (width + 3) + PAGE_META``, so the
+  final int32 accumulators stay below 2^31 whenever ``n <= 2^25`` rows.
+  Inputs outside the proven envelope (negative values — the signed PREFIX
+  min/max would diverge — more rows, or wider columns) fall back to the
+  NumPy reference kernels, so `batched_codec_bytes` is exact for every
+  input.
+
+Parity contract: bit-identical to `compression.BATCH_KERNELS[method]` —
+asserted by tests/test_pallas_parity.py.  Kernels run under
+``interpret=True`` on CPU (same idiom as kernels/ops.py) and compile for
+TPU unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# mirror repro.core.compression.PAGE_META / _ptr_bytes thresholds; imported
+# lazily in the fallback path to avoid a kernels -> core import at load time
+_PAGE_META = 16
+_LANES = 128
+_M32 = np.uint64(0xFFFFFFFF)
+
+# envelope of the int32 exactness proof (see module docstring)
+_MAX_ROWS = 1 << 25
+_MAX_WIDTH = 8
+
+ORD_IND_METHODS = ("NS", "GDICT")
+ORD_DEP_METHODS = ("LDICT", "PREFIX", "RLE")
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _sig32(u):
+    """Significant bytes (1..4) of a uint32 plane."""
+    return (jnp.int32(1)
+            + (u >= jnp.uint32(1 << 8)).astype(jnp.int32)
+            + (u >= jnp.uint32(1 << 16)).astype(jnp.int32)
+            + (u >= jnp.uint32(1 << 24)).astype(jnp.int32))
+
+
+def _sig64(hi, lo):
+    """significant_bytes of the uint64 value represented by (hi, lo)."""
+    return jnp.where(hi > jnp.uint32(0), 4 + _sig32(hi), _sig32(lo))
+
+
+def _ptr(ndv):
+    """Dictionary pointer bytes for ndv entries (== compression._ptr_bytes)."""
+    return jnp.where(ndv <= 256, 1, jnp.where(ndv <= 65536, 2, 3))
+
+
+def _page_rows(shape, npages: int, rpp: int, last_rows: int):
+    """(TM, npages) int32 rows actually stored in each page."""
+    pg = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return jnp.where(pg == npages - 1, jnp.int32(last_rows), jnp.int32(rpp))
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies.  hi/lo are (TILE_M, n_pad) uint32 planes, w is (TILE_M, 1)
+# int32, out is (TILE_M, 1) int32.
+# ---------------------------------------------------------------------------
+
+def _ns_kernel(hi_ref, lo_ref, w_ref, out_ref, *, n: int):
+    hi, lo, w = hi_ref[...], lo_ref[...], w_ref[...]
+    sig = jnp.minimum(_sig64(hi, lo), w)
+    half = jnp.minimum(2 * sig + 1, 2 * w)
+    col = jax.lax.broadcasted_iota(jnp.int32, half.shape, 1)
+    half = jnp.where(col < n, half, 0)  # zero-padded lanes contribute nothing
+    out_ref[...] = (jnp.sum(half, axis=1, keepdims=True) + 1) // 2
+
+
+def _gdict_kernel(hi_ref, lo_ref, w_ref, out_ref, *, n: int):
+    # rows arrive sorted and edge-padded with their own max, so padding lanes
+    # never add a distinct value and no mask is needed
+    hi, lo, w = hi_ref[...], lo_ref[...], w_ref[...]
+    neq = (hi[:, 1:] != hi[:, :-1]) | (lo[:, 1:] != lo[:, :-1])
+    ndv = 1 + jnp.sum(neq.astype(jnp.int32), axis=1, keepdims=True)
+    out_ref[...] = ndv * w + n * _ptr(ndv)
+
+
+def _ldict_kernel(hi_ref, lo_ref, w_ref, out_ref, *,
+                  npages: int, rpp: int, last_rows: int):
+    tm = hi_ref.shape[0]
+    # rows arrive page-sorted; adjacent inequality within a page counts ndv
+    hi = hi_ref[...].reshape(tm, npages, rpp)
+    lo = lo_ref[...].reshape(tm, npages, rpp)
+    w = w_ref[...]
+    neq = (hi[:, :, 1:] != hi[:, :, :-1]) | (lo[:, :, 1:] != lo[:, :, :-1])
+    ndv = 1 + jnp.sum(neq.astype(jnp.int32), axis=2)        # (TM, npages)
+    rows = _page_rows(ndv.shape, npages, rpp, last_rows)
+    per_page = ndv * w + rows * _ptr(ndv) + _PAGE_META
+    cap = rows * w + _PAGE_META
+    out_ref[...] = jnp.sum(jnp.minimum(per_page, cap), axis=1, keepdims=True)
+
+
+def _prefix_kernel(hi_ref, lo_ref, w_ref, out_ref, *,
+                   npages: int, rpp: int, last_rows: int):
+    tm = hi_ref.shape[0]
+    hi = hi_ref[...].reshape(tm, npages, rpp)
+    lo = lo_ref[...].reshape(tm, npages, rpp)
+    w = w_ref[...]
+    # 64-bit unsigned page min/max through the planes (lexicographic)
+    mnh = jnp.min(hi, axis=2)
+    mxh = jnp.max(hi, axis=2)
+    mnl = jnp.min(jnp.where(hi == mnh[:, :, None], lo,
+                            jnp.uint32(0xFFFFFFFF)), axis=2)
+    mxl = jnp.max(jnp.where(hi == mxh[:, :, None], lo, jnp.uint32(0)), axis=2)
+    xh, xl = mnh ^ mxh, mnl ^ mxl
+    diff = jnp.where((xh | xl) == jnp.uint32(0), 0, _sig64(xh, xl))
+    common = jnp.maximum(w - diff, 0)
+    rows = _page_rows(diff.shape, npages, rpp, last_rows)
+    per_page = common + rows * (1 + w - common) + _PAGE_META
+    cap = rows * w + _PAGE_META
+    out_ref[...] = jnp.sum(jnp.minimum(per_page, cap), axis=1, keepdims=True)
+
+
+def _rle_kernel(hi_ref, lo_ref, w_ref, out_ref, *,
+                npages: int, rpp: int, last_rows: int):
+    tm = hi_ref.shape[0]
+    # unsorted pages: adjacent inequality counts runs; the edge padding
+    # repeats the row's last value so padded lanes never start a run
+    hi = hi_ref[...].reshape(tm, npages, rpp)
+    lo = lo_ref[...].reshape(tm, npages, rpp)
+    w = w_ref[...]
+    neq = (hi[:, :, 1:] != hi[:, :, :-1]) | (lo[:, :, 1:] != lo[:, :, :-1])
+    runs = 1 + jnp.sum(neq.astype(jnp.int32), axis=2)
+    rows = _page_rows(runs.shape, npages, rpp, last_rows)
+    per_page = runs * (w + 2) + _PAGE_META
+    cap = rows * w + _PAGE_META
+    out_ref[...] = jnp.sum(jnp.minimum(per_page, cap), axis=1, keepdims=True)
+
+
+_KERNELS = {
+    "NS": _ns_kernel,
+    "GDICT": _gdict_kernel,
+    "LDICT": _ldict_kernel,
+    "PREFIX": _prefix_kernel,
+    "RLE": _rle_kernel,
+}
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "method", "n", "rpp", "tile_m", "interpret"))
+def _codec_call(hi, lo, w, *, method: str, n: int, rpp: int,
+                tile_m: int, interpret: bool):
+    m_pad, n_pad = hi.shape
+    if method == "GDICT":
+        hi, lo = jax.lax.sort((hi, lo), dimension=1, num_keys=2)
+        body = functools.partial(_gdict_kernel, n=n)
+    elif method == "NS":
+        body = functools.partial(_ns_kernel, n=n)
+    else:
+        npages = n_pad // rpp
+        last_rows = n - (npages - 1) * rpp
+        if method == "LDICT":
+            h3 = hi.reshape(m_pad, npages, rpp)
+            l3 = lo.reshape(m_pad, npages, rpp)
+            h3, l3 = jax.lax.sort((h3, l3), dimension=2, num_keys=2)
+            hi, lo = h3.reshape(m_pad, n_pad), l3.reshape(m_pad, n_pad)
+        body = functools.partial(_KERNELS[method], npages=npages, rpp=rpp,
+                                 last_rows=last_rows)
+    grid = (m_pad // tile_m,)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((tile_m, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m_pad, 1), jnp.int32)],
+        interpret=interpret,
+    )(hi, lo, w)[0]
+
+
+def _pad_rows(a: np.ndarray, m_pad: int, fill) -> np.ndarray:
+    m = a.shape[0]
+    if m_pad == m:
+        return a
+    pad = np.full((m_pad - m,) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def in_envelope(cols: np.ndarray, widths: np.ndarray) -> bool:
+    """True when the int32 exactness proof covers this stack."""
+    m, n = cols.shape
+    return (n <= _MAX_ROWS and int(widths.max(initial=0)) <= _MAX_WIDTH
+            and (m == 0 or n == 0 or int(cols.min()) >= 0))
+
+
+def batched_codec_bytes(method: str, cols: np.ndarray, widths: np.ndarray,
+                        rpp: int) -> np.ndarray:
+    """Pallas twin of compression.BATCH_KERNELS[method] — bit-identical.
+
+    cols is an (ntargets, nrows) int64 stack, widths (ntargets,), rpp the
+    shared rows-per-page.  Inputs outside the int32 exactness envelope are
+    routed to the NumPy reference so the result is exact unconditionally.
+    """
+    cols = np.asarray(cols, dtype=np.int64)
+    widths = np.asarray(widths, dtype=np.int64)
+    m, n = cols.shape
+    if m == 0 or n == 0:
+        return np.zeros(m, dtype=np.int64)
+    if not in_envelope(cols, widths):
+        from ..core import compression as _comp
+        return _comp.BATCH_KERNELS[method](cols, widths, rpp)
+
+    # pad the rows axis for the kernel's needs, then split uint32 planes
+    if method == "NS":
+        n_pad = -(-n // _LANES) * _LANES
+        if n_pad != n:
+            cols = np.concatenate(
+                [cols, np.zeros((m, n_pad - n), dtype=np.int64)], axis=1)
+    elif method == "GDICT":
+        n_pad = -(-n // _LANES) * _LANES
+        if n_pad != n:
+            cols = np.concatenate(
+                [cols, np.repeat(cols[:, -1:], n_pad - n, axis=1)], axis=1)
+    else:  # paged: edge-pad to a whole number of pages (== _pages_batch)
+        npages = -(-n // rpp)
+        n_pad = npages * rpp
+        if n_pad != n:
+            cols = np.concatenate(
+                [cols, np.repeat(cols[:, -1:], n_pad - n, axis=1)], axis=1)
+
+    u = cols.astype(np.uint64)
+    hi = (u >> np.uint64(32)).astype(np.uint32)
+    lo = (u & _M32).astype(np.uint32)
+
+    m_pad = -(-m // 8) * 8
+    tile_m = next(t for t in (64, 32, 16, 8) if m_pad % t == 0)
+    hi = _pad_rows(hi, m_pad, 0)
+    lo = _pad_rows(lo, m_pad, 0)
+    w = _pad_rows(widths.astype(np.int32)[:, None], m_pad, 1)
+
+    out = _codec_call(jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(w),
+                      method=method, n=n, rpp=int(rpp), tile_m=tile_m,
+                      interpret=_use_interpret())
+    return np.asarray(out, dtype=np.int64)[:m, 0]

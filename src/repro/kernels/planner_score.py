@@ -1,0 +1,243 @@
+"""Pallas (node x f) scoring kernels for the batched §5.2 planner.
+
+Two kernels behind `PlannerEngine(backend="jax")`:
+
+* `prob_within` — the accuracy-probability stage
+  ``P(1/(1+e) <= X <= 1+e)`` over (mean, std) stacks, mirroring
+  `errors.prob_within_batch` (same std<=1e-12 indicator branch, same phi
+  evaluation order) in float32 on the VPU.
+
+* `fused_score` — the whole candidate-scoring step of one §5.2 target
+  fused into one kernel: the sequential Goodman fold over the (candidate,
+  child, f) RV stack, continued with the deduction-error factor, the
+  composed std, the masked accuracy probability, and the lines-6-9 winner
+  selection (first-argmax of p over eligible candidates, first-argmin of
+  the extra sampling cost) per fraction.
+
+Consistency contract (this is what keeps replay and session-vs-fresh
+plan equality exact under the jax backend): both kernels evaluate the
+probability through the SAME `_prob_expr` op sequence, so a probability
+recomputed later from a stored (mean, std) pair — planner buf values are
+float32-exact once written — is bit-identical to the fused kernel's
+in-line value.  The engine consumes the fused kernel's cm/cs/p and keeps
+winner selection on the float64 side (p is float32-exact so the argmax
+agrees; the lines-8-9 extra-cost argmin stays on the engine's float64
+sampling costs, which the in-kernel float32 argmin mirrors except on
+sub-ulp ties).  The kernels are NOT bit-parity with the float64 NumPy
+backend (a different erf and float32 arithmetic); the NumPy backend
+remains the parity reference against the scalar planner.
+
+Parity suite: tests/test_pallas_parity.py asserts `prob_within` against
+`errors.prob_within_batch` within float32 tolerance (exactly on the
+indicator branch) and asserts `fused_score`'s staged outputs (cm/cs/p)
+and winners against a NumPy re-expression of the same fold.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_SQRT2_F32 = np.float32(math.sqrt(2.0))
+_BIG = np.int32(2 ** 31 - 1)  # "no winner" sentinel for the argmin outputs
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _prob_expr(cm, cs, e: float):
+    """float32 accuracy probability, one op sequence shared by BOTH kernels
+    (the engine's replay consistency depends on this being identical)."""
+    lo = jnp.float32(1.0 / (1.0 + e))
+    hi = jnp.float32(1.0 + e)
+    small = cs <= jnp.float32(1e-12)
+    s = jnp.where(small, jnp.float32(1.0), cs)
+    phi_hi = jnp.float32(0.5) * (jnp.float32(1.0)
+                                 + jax.lax.erf((hi - cm) / s / _SQRT2_F32))
+    phi_lo = jnp.float32(0.5) * (jnp.float32(1.0)
+                                 + jax.lax.erf((lo - cm) / s / _SQRT2_F32))
+    ind = ((cm >= lo) & (cm <= hi)).astype(jnp.float32)
+    return jnp.where(small, ind, phi_hi - phi_lo)
+
+
+def _compose_expr(m, s, dm, vt, mq):
+    """Sequential Goodman fold over the child axis of (nc, K, nf) stacks,
+    continued with the (nc, 1) deduction-error factors — the float32 twin
+    of errors.goodman_fold + the engine's deduction continuation.  A
+    (mean=1, std=0) EXACT pad is the exact multiplicative identity in
+    float32 too, so folds of different padded K agree bitwise."""
+    k = m.shape[1]
+    e_prod = m[:, 0, :]
+    v_term = s[:, 0, :] * s[:, 0, :] + e_prod * e_prod
+    e2_term = e_prod * e_prod
+    for kk in range(1, k):
+        mk = m[:, kk, :]
+        sk = s[:, kk, :]
+        msq = mk * mk
+        e_prod = e_prod * mk
+        v_term = v_term * (sk * sk + msq)
+        e2_term = e2_term * msq
+    cm = e_prod * dm
+    v = v_term * vt
+    e2 = e2_term * mq
+    cs = jnp.sqrt(jnp.maximum(v - e2, jnp.float32(0.0)))
+    return cm, cs
+
+
+# ---------------------------------------------------------------------------
+# prob_within: 1-D probability stage
+# ---------------------------------------------------------------------------
+
+def _prob_kernel(m_ref, s_ref, o_ref, *, e: float):
+    o_ref[...] = _prob_expr(m_ref[...], s_ref[...], e)
+
+
+@functools.partial(jax.jit, static_argnames=("e", "interpret"))
+def _prob_call(m, s, *, e: float, interpret: bool):
+    return pl.pallas_call(
+        functools.partial(_prob_kernel, e=e),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(m.shape, lambda i: (0, 0)),
+                  pl.BlockSpec(m.shape, lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec(m.shape, lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32)],
+        interpret=interpret,
+    )(m, s)[0]
+
+
+def prob_within(means: np.ndarray, stds: np.ndarray, e: float) -> np.ndarray:
+    """Pallas twin of errors.prob_within_batch (float32).  Accepts any
+    shape; pads to pow2 lane multiples to bound the compiled-shape count
+    (same idiom as the retired jitted-erf backend)."""
+    means = np.asarray(means, dtype=np.float64)
+    stds = np.asarray(stds, dtype=np.float64)
+    n = means.size
+    if n == 0:
+        return np.zeros(means.shape)
+    n_pad = max(_LANES, 1 << int(n - 1).bit_length())
+    mp = np.ones((1, n_pad), dtype=np.float32)
+    sp = np.zeros((1, n_pad), dtype=np.float32)
+    mp[0, :n] = means.ravel()
+    sp[0, :n] = stds.ravel()
+    out = _prob_call(jnp.asarray(mp), jnp.asarray(sp), e=float(e),
+                     interpret=_use_interpret())
+    return np.asarray(out, dtype=np.float64)[0, :n].reshape(means.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused_score: compose + prob + winner selection for one target record
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(m_ref, s_ref, dm_ref, vt_ref, mq_ref, m67_ref, p9_ref,
+                  ex_ref, cm_ref, cs_ref, p_ref, w6_ref, w9_ref,
+                  *, k: int, nf: int, e: float, q: float):
+    nc = m_ref.shape[0]
+    m = m_ref[...].reshape(nc, k, nf)
+    s = s_ref[...].reshape(nc, k, nf)
+    cm, cs = _compose_expr(m, s, dm_ref[...], vt_ref[...], mq_ref[...])
+    m67 = m67_ref[...] != 0
+    p9 = p9_ref[...] != 0
+    p = jnp.where(m67 | p9, _prob_expr(cm, cs, e), jnp.float32(0.0))
+    sat = p >= jnp.float32(q)
+    iota = jax.lax.broadcasted_iota(jnp.int32, p.shape, 0)
+    # lines 6-7: first argmax of p over eligible (enabled & satisfying)
+    elig = m67 & sat
+    pe = jnp.where(elig, p, jnp.float32(-1.0))
+    best = jnp.max(pe, axis=0, keepdims=True)
+    w6 = jnp.min(jnp.where(elig & (pe == best), iota, _BIG), axis=0,
+                 keepdims=True)
+    # lines 8-9: first argmin of extra sampling cost where no line-6 winner
+    has6 = jnp.any(elig, axis=0, keepdims=True)
+    ok9 = p9 & sat & ~has6
+    xe = jnp.where(ok9, ex_ref[...], jnp.float32(np.inf))
+    bx = jnp.min(xe, axis=0, keepdims=True)
+    w9 = jnp.min(jnp.where(ok9 & (xe == bx), iota, _BIG), axis=0,
+                 keepdims=True)
+    cm_ref[...] = cm
+    cs_ref[...] = cs
+    p_ref[...] = p
+    w6_ref[...] = w6
+    w9_ref[...] = w9
+
+
+@functools.partial(jax.jit, static_argnames=("k", "e", "q", "interpret"))
+def _fused_call(m, s, dm, vt, mq, m67, p9, ex, *, k: int, e: float,
+                q: float, interpret: bool):
+    nc, knf = m.shape
+    nf = knf // k
+    full = lambda i: (0, 0)  # noqa: E731 - single-block grid
+    spec = lambda shape: pl.BlockSpec(shape, full)  # noqa: E731
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, k=k, nf=nf, e=e, q=q),
+        grid=(1,),
+        in_specs=[spec(m.shape), spec(s.shape), spec(dm.shape),
+                  spec(vt.shape), spec(mq.shape), spec(m67.shape),
+                  spec(p9.shape), spec(ex.shape)],
+        out_specs=[spec((nc, nf)), spec((nc, nf)), spec((nc, nf)),
+                   spec((1, nf)), spec((1, nf))],
+        out_shape=[jax.ShapeDtypeStruct((nc, nf), jnp.float32),
+                   jax.ShapeDtypeStruct((nc, nf), jnp.float32),
+                   jax.ShapeDtypeStruct((nc, nf), jnp.float32),
+                   jax.ShapeDtypeStruct((1, nf), jnp.int32),
+                   jax.ShapeDtypeStruct((1, nf), jnp.int32)],
+        interpret=interpret,
+    )(m, s, dm, vt, mq, m67, p9, ex)
+
+
+def _pad_axis(a: np.ndarray, axis: int, size: int, fill) -> np.ndarray:
+    if a.shape[axis] == size:
+        return a
+    shape = list(a.shape)
+    shape[axis] = size - a.shape[axis]
+    return np.concatenate([a, np.full(shape, fill, dtype=a.dtype)], axis=axis)
+
+
+def fused_score(m: np.ndarray, s: np.ndarray, dm: np.ndarray,
+                vt: np.ndarray, mq: np.ndarray, mask67: np.ndarray,
+                pre9, extra, e: float, q: float):
+    """One fused pass over a target's (nc, K, nf) candidate stack.
+
+    m/s are child RV means/stds (EXACT-padded along K), dm/vt/mq the
+    (nc, 1) deduction-error continuation factors, mask67/pre9 the
+    lines-6-7 / lines-8-9 eligibility masks, extra the summed sampling
+    cost of unknown children (lines 8-9 tie-break axis).  Returns
+    (cm, cs, p, w6, w9): composed mean/std, masked probability — all
+    float32 values in float64 arrays — and the per-f winner indices
+    (int64; meaningless where the respective mask column is empty).
+    """
+    nc, k, nf = m.shape
+    nc_pad = -(-nc // 8) * 8
+    nf_pad = -(-nf // _LANES) * _LANES
+    z = np.zeros((nc, nf)) if pre9 is None else pre9
+    x = np.zeros((nc, nf)) if extra is None else extra
+
+    def prep(a, fill, dtype):
+        a = _pad_axis(np.asarray(a, dtype=dtype), 0, nc_pad, fill)
+        return _pad_axis(a, a.ndim - 1, nf_pad, fill)
+
+    mp = prep(m, 1.0, np.float32).reshape(nc_pad, k * nf_pad)
+    sp = prep(s, 0.0, np.float32).reshape(nc_pad, k * nf_pad)
+    dmp = _pad_axis(np.asarray(dm, dtype=np.float32), 0, nc_pad, 1.0)
+    vtp = _pad_axis(np.asarray(vt, dtype=np.float32), 0, nc_pad, 1.0)
+    mqp = _pad_axis(np.asarray(mq, dtype=np.float32), 0, nc_pad, 1.0)
+    m67p = prep(mask67, 0, np.int32)
+    p9p = prep(z, 0, np.int32)
+    exp_ = prep(x, 0.0, np.float32)
+
+    cm, cs, p, w6, w9 = _fused_call(
+        jnp.asarray(mp), jnp.asarray(sp), jnp.asarray(dmp), jnp.asarray(vtp),
+        jnp.asarray(mqp), jnp.asarray(m67p), jnp.asarray(p9p),
+        jnp.asarray(exp_), k=k, e=float(e), q=float(q),
+        interpret=_use_interpret())
+    return (np.asarray(cm, dtype=np.float64)[:nc, :nf],
+            np.asarray(cs, dtype=np.float64)[:nc, :nf],
+            np.asarray(p, dtype=np.float64)[:nc, :nf],
+            np.asarray(w6, dtype=np.int64)[0, :nf],
+            np.asarray(w9, dtype=np.int64)[0, :nf])

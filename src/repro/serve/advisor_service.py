@@ -36,6 +36,18 @@ advisors:
   byte-identical to the scalar `sample_cf` per target, and therefore
   independent of WHICH tenants' targets share a batch — union-batching
   is bit-exact.
+* **Cross-tenant batched COST phase** (PR 8) — after the estimation
+  prefetch, the service collects every admitted recommend's stale
+  (query, candidates) cost jobs (`AdvisorSession.peek_cost_jobs`),
+  stacks them per engine backend into padded (jobs x candidates)
+  arrays, and evaluates all tenants' candidate costs in ONE
+  `batched_candidate_costs` call (`backend="jax"` runs the stacked
+  jit kernel).  Results are handed back via
+  `AdvisorSession.accept_cost_results` (keyed by workload_version so
+  stale prefetches are dropped) and consumed verbatim by the slot's
+  recommend.  Bit-identical to per-slot costing on both backends:
+  against a secondary-free session base every per-candidate cost is
+  purely elementwise, so stacking cannot change a single bit.
 
 Durability (the fleet's failure surface, driven by a seeded
 `faults.FaultInjector` in tests and benchmarks/fault_recovery.py):
@@ -88,12 +100,14 @@ from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Dict, List, Optional, Tuple
 
 from ..core.advisor import AdvisorOptions
+from ..core.cost_engine import batched_candidate_costs
 from ..core.estimation_engine import EstimationEngine
 from ..core.estimation_graph import NodeKey, State
 from ..core.faults import FaultError, FaultInjector
 from ..core.samplecf import (EstimateCache, SampleManager, SizeEstimate,
                              schema_fingerprint)
 from ..core.session import AdvisorSession, SessionSnapshot
+from ..core.whatif import base_configuration
 from ..core.workload import Workload, WorkloadDelta
 from .engine import QueueFull
 
@@ -308,6 +322,8 @@ class AdvisorFleetService:
         self.prefetch_targets = 0     # targets sized by the prefetch
         self.prefetch_hits = 0        # peeked targets already cached
         self.prefetch_failures = 0    # peeks/batches that raised
+        self.cost_prefetch_batches = 0  # cross-tenant stacked COST batches
+        self.cost_prefetch_jobs = 0     # (tenant, query) jobs so scored
         self.retries = 0              # transient failures requeued
         self.timeouts = 0             # requests expired by their deadline
         self.degraded_recommends = 0  # deadline recommends served degraded
@@ -572,6 +588,62 @@ class AdvisorFleetService:
             self.prefetch_batches += 1
             self.prefetch_targets += len(keys)
 
+    def _cost_prefetch(self) -> None:
+        """Stack the admitted recommends' stale per-query costing jobs
+        into cross-tenant (tenant x statement x candidate) batches, one
+        per engine backend — the fleet COST phase.
+
+        Each tenant's `peek_cost_jobs()` runs its estimation stage once
+        (memoized by workload version; the slot's recommend reuses it
+        verbatim) and exposes the queries whose §6.1 selections need
+        re-costing; `batched_candidate_costs` then scores every tenant's
+        jobs in one stacked pass with exactly the per-job arithmetic
+        (bitwise on numpy, the same jit'd float32 kernel on jax), and
+        results flow back through `accept_cost_results`, keyed by
+        workload version so a stale batch is simply dropped.  Like
+        `_prefetch`, a failure is counted and attached to the ticket but
+        never fatal — the recommend recomputes on its own."""
+        by_backend: Dict[str, List] = {}
+        for req in self.slots:
+            if req is None or req.kind != "recommend":
+                continue
+            t = self.tenants[req.tenant_id]
+            s = t.session
+            if s is None:
+                continue
+            try:
+                jobs = s.peek_cost_jobs()
+                if not jobs:
+                    continue
+                base = base_configuration(s.schema)
+                rows = [(q.name, s.engine.cost_job_arrays(q, base, cands))
+                        for q, cands in jobs]
+            except Exception as e:
+                self.prefetch_failures += 1
+                req.ticket.prefetch_error = e
+                continue  # the slot's recommend surfaces/retries it
+            by_backend.setdefault(s.engine.backend, []).append(
+                (s, s.workload_version, rows, req.ticket))
+        for backend, entries in by_backend.items():
+            flat = [arrays for (_, _, rows, _) in entries
+                    for (_, arrays) in rows]
+            try:
+                costs = batched_candidate_costs(flat, backend=backend)
+            except Exception as e:
+                self.prefetch_failures += 1
+                for (_, _, _, tk) in entries:
+                    tk.prefetch_error = e
+                continue
+            k = 0
+            for s, ver, rows, _ in entries:
+                res = {}
+                for qname, arrays in rows:
+                    res[qname] = costs[k, :len(arrays["cov"])]
+                    k += 1
+                s.accept_cost_results(ver, res)
+                self.cost_prefetch_jobs += len(rows)
+            self.cost_prefetch_batches += 1
+
     def _final_failure(self, req: _FleetRequest, t: _Tenant,
                        e: BaseException) -> None:
         """Resolve a request with its (post-retry) error and feed the
@@ -677,6 +749,7 @@ class AdvisorFleetService:
         if any(s is not None for s in self.slots):
             if self.fc.prefetch:
                 self._prefetch()
+                self._cost_prefetch()
             for i, req in enumerate(self.slots):
                 if req is None:
                     continue
@@ -719,6 +792,8 @@ class AdvisorFleetService:
             "prefetch_targets": self.prefetch_targets,
             "prefetch_hits": self.prefetch_hits,
             "prefetch_failures": self.prefetch_failures,
+            "cost_prefetch_batches": self.cost_prefetch_batches,
+            "cost_prefetch_jobs": self.cost_prefetch_jobs,
             "retries": self.retries,
             "timeouts": self.timeouts,
             "degraded_recommends": self.degraded_recommends,

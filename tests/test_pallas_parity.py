@@ -1,0 +1,284 @@
+"""CPU-interpret parity suite for the Pallas advisor kernels (tier 1).
+
+Pins the two contracts the unified "jax" backend rests on:
+
+* `kernels.codec_bytes.batched_codec_bytes` is BIT-IDENTICAL to the
+  frozen NumPy codec references (`compression.BATCH_KERNELS`) for every
+  input — inside the int32 exactness envelope via the uint32-plane
+  kernels, outside it via the kernels' own NumPy routing — so the
+  estimation stage under backend="jax" registers exactly the sizes the
+  numpy backend registers.
+
+* `kernels.planner_score` computes float32 values whose *internal*
+  consistency is exact: the fused kernel's probability equals
+  `prob_within` recomputed from its own (cm, cs) outputs bitwise (the
+  replay / session-vs-fresh contract), and EXACT (mean=1, std=0) K-pads
+  are the exact multiplicative identity (K-pad invariance, bitwise).
+  Against the float64 NumPy reference the kernels are only
+  float32-close — documented, since erf and arithmetic differ — which
+  is why the numpy backend remains the advisor's parity reference.
+
+Runs in Pallas interpret mode on CPU (no accelerator required); the CI
+jax job executes exactly this file plus the backend-unification tests.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax", reason="parity suite needs jax")
+
+from repro.core import compression as comp
+from repro.core import errors as err
+from repro.kernels import codec_bytes as ck
+from repro.kernels import planner_score as ps
+
+try:  # soft import: property twins only run where hypothesis exists
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except Exception:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYP = False
+
+METHODS = ("NS", "GDICT", "LDICT", "PREFIX", "RLE")
+RNG = np.random.default_rng(7)
+
+
+def ref_bytes(method, cols, widths, rpp):
+    return comp.BATCH_KERNELS[method](np.asarray(cols, dtype=np.int64),
+                                      np.asarray(widths, dtype=np.int64),
+                                      rpp)
+
+
+def assert_codec_exact(method, cols, widths, rpp):
+    cols = np.asarray(cols, dtype=np.int64)
+    widths = np.asarray(widths, dtype=np.int64)
+    got = ck.batched_codec_bytes(method, cols, widths, rpp)
+    want = ref_bytes(method, cols, widths, rpp)
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int64
+
+
+# ---------------------------------------------------------------------------
+# codec-bytes kernels: bit equality against the frozen NumPy references
+# ---------------------------------------------------------------------------
+
+class TestCodecBitEquality:
+    @pytest.mark.parametrize("method", METHODS)
+    @pytest.mark.parametrize("shape,rpp", [
+        ((1, 1), 1),        # single value, single-row pages
+        ((3, 7), 3),        # partial last page
+        ((5, 64), 16),      # exact pages
+        ((8, 129), 128),    # one row past a lane boundary
+        ((17, 200), 1000),  # rpp > nrows: one page
+        ((4, 333), 1),      # rpp=1: every row its own page
+    ])
+    def test_random_small_values(self, method, shape, rpp):
+        cols = RNG.integers(0, 1 << 16, size=shape)
+        widths = RNG.integers(1, 9, size=shape[0])
+        assert_codec_exact(method, cols, widths, rpp)
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_values_beyond_32_and_56_bits(self, method):
+        # magnitudes crossing both uint32 planes: the kernels must stay
+        # exact where float64 NS bit-lengths would already be unsafe
+        cols = np.stack([
+            RNG.integers(0, 1 << 62, size=96),
+            np.full(96, (1 << 56) + 12345, dtype=np.int64),
+            np.full(96, (1 << 32) - 1, dtype=np.int64),
+            np.arange(96, dtype=np.int64) + (1 << 40),
+        ])
+        widths = np.array([8, 8, 8, 8])
+        assert_codec_exact(method, cols, widths, 32)
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_degenerate_columns(self, method):
+        cols = np.stack([
+            np.zeros(50, dtype=np.int64),                 # all zero
+            np.full(50, 9, dtype=np.int64),               # all equal
+            np.repeat(np.arange(10), 5),                  # long runs
+            np.arange(50, dtype=np.int64),                # all distinct
+            np.sort(RNG.integers(0, 64, size=50)),        # sorted, dup-heavy
+        ])
+        widths = np.array([1, 2, 4, 8, 3])
+        assert_codec_exact(method, cols, widths, 7)
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_out_of_envelope_routes_to_numpy(self, method):
+        # width > 8 and negative values both leave the proven int32
+        # envelope; the kernel must route to NumPy and stay exact
+        wide = RNG.integers(0, 1 << 20, size=(3, 40))
+        assert not ck.in_envelope(wide, np.array([16, 9, 32]))
+        assert_codec_exact(method, wide, np.array([16, 9, 32]), 8)
+        neg = RNG.integers(-1000, 1000, size=(2, 30))
+        neg[0, 0] = -5
+        assert not ck.in_envelope(neg, np.array([4, 4]))
+        assert_codec_exact(method, neg, np.array([4, 4]), 8)
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_empty_stack(self, method):
+        got = ck.batched_codec_bytes(
+            method, np.zeros((0, 5), dtype=np.int64),
+            np.zeros(0, dtype=np.int64), 4)
+        assert got.shape == (0,)
+
+    def test_dispatcher_routes_jax_backend(self):
+        cols = RNG.integers(0, 1 << 10, size=(6, 90))
+        widths = RNG.integers(1, 9, size=6)
+        for method in METHODS:
+            np.testing.assert_array_equal(
+                comp.batched_bytes(method, cols, widths, 11, backend="jax"),
+                comp.batched_bytes(method, cols, widths, 11))
+
+    if HAVE_HYP:
+        @settings(max_examples=30, deadline=None)
+        @given(st.integers(1, 6), st.integers(1, 80), st.integers(1, 96),
+               st.integers(0, 2 ** 63 - 1), st.integers(1, 8))
+        def test_property_twin(self, m, n, rpp, top, w):
+            cols = np.remainder(
+                np.arange(m * n, dtype=np.uint64) * np.uint64(2654435761),
+                np.uint64(top) + np.uint64(1)).astype(np.int64).reshape(m, n)
+            widths = np.full(m, w, dtype=np.int64)
+            for method in METHODS:
+                assert_codec_exact(method, cols, widths, rpp)
+
+
+# ---------------------------------------------------------------------------
+# planner kernels: float32 closeness to the f64 reference, exact internal
+# consistency (the replay contract), exact K-pad invariance
+# ---------------------------------------------------------------------------
+
+def random_rvs(nc, k, nf, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(0.6, 1.4, size=(nc, k, nf))
+    s = rng.uniform(0.0, 0.3, size=(nc, k, nf))
+    s[rng.random(s.shape) < 0.2] = 0.0  # exercise the indicator branch
+    dm = rng.uniform(0.8, 1.2, size=(nc, 1))
+    msq = dm * dm
+    vt = msq + rng.uniform(0.0, 0.1, size=(nc, 1))
+    return m, s, dm, vt, msq
+
+
+def staged_reference(m, s, dm, vt, mq, mask, e):
+    """Float64 NumPy re-expression of compose + prob (the goodman fold)."""
+    e_prod = m[:, 0, :].copy()
+    v_term = s[:, 0, :] ** 2 + e_prod ** 2
+    e2 = e_prod ** 2
+    for kk in range(1, m.shape[1]):
+        mk, sk = m[:, kk, :], s[:, kk, :]
+        e_prod = e_prod * mk
+        v_term = v_term * (sk * sk + mk * mk)
+        e2 = e2 * (mk * mk)
+    cm = e_prod * dm
+    cs = np.sqrt(np.maximum(v_term * vt - e2 * mq, 0.0))
+    p = np.zeros_like(cm)
+    ii = mask.nonzero()
+    p[ii] = err.prob_within_batch(cm[ii], cs[ii], e)
+    return cm, cs, p
+
+
+class TestProbWithin:
+    def test_indicator_branch_exact(self):
+        e = 0.1
+        lo, hi = 1.0 / (1.0 + e), 1.0 + e
+        means = np.array([0.2, lo, 1.0, hi, 1.6, np.float64(np.float32(lo))])
+        stds = np.zeros_like(means)
+        got = ps.prob_within(means, stds, e)
+        # std=0: pure indicator; f32 rounding of the bounds could only
+        # matter at the exact boundary, where both sides round the same
+        assert set(np.unique(got)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(
+            got[[0, 2, 4]], err.prob_within_batch(means, stds, e)[[0, 2, 4]])
+
+    @pytest.mark.parametrize("n,e", [(1, 0.05), (7, 0.1), (128, 0.2),
+                                     (129, 0.1), (1000, 0.15)])
+    def test_erf_branch_close(self, n, e):
+        rng = np.random.default_rng(n)
+        means = rng.uniform(0.5, 1.5, size=n)
+        stds = rng.uniform(1e-6, 0.5, size=n)
+        got = ps.prob_within(means, stds, e)
+        want = err.prob_within_batch(means, stds, e)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_shapes_and_empty(self):
+        assert ps.prob_within(np.zeros(0), np.zeros(0), 0.1).shape == (0,)
+        m2 = np.full((3, 4), 1.0)
+        s2 = np.zeros((3, 4))
+        assert ps.prob_within(m2, s2, 0.1).shape == (3, 4)
+
+    if HAVE_HYP:
+        @settings(max_examples=40, deadline=None)
+        @given(st.floats(0.3, 2.5), st.floats(0.0, 1.0), st.floats(0.02, 0.5))
+        def test_property_twin(self, mean, std, e):
+            got = float(ps.prob_within(np.array([mean]), np.array([std]),
+                                       e)[0])
+            want = float(err.prob_within_batch(np.array([mean]),
+                                               np.array([std]), e)[0])
+            assert abs(got - want) <= 3e-5
+            assert 0.0 <= got <= 1.0
+
+
+class TestFusedScore:
+    E, Q = 0.1, 0.9
+
+    def test_staged_f64_reference_close(self):
+        nc, k, nf = 11, 3, 5
+        m, s, dm, vt, mq = random_rvs(nc, k, nf, seed=1)
+        mask67 = np.ones((nc, nf), dtype=bool)
+        mask67[2] = False
+        cm, cs, p, _, _ = ps.fused_score(m, s, dm, vt, mq, mask67, None,
+                                         None, self.E, self.Q)
+        cm_r, cs_r, p_r = staged_reference(m, s, dm, vt, mq, mask67, self.E)
+        np.testing.assert_allclose(cm, cm_r, rtol=1e-5)
+        np.testing.assert_allclose(cs, cs_r, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(p, p_r, atol=5e-5)
+        # masked-out rows are exactly zero on both sides
+        assert (p[2] == 0.0).all()
+
+    def test_prob_consistency_bitwise(self):
+        """THE replay contract: recomputing the probability from the fused
+        kernel's own (cm, cs) through prob_within reproduces its p
+        bitwise (same _prob_expr, float32-exact in-and-out)."""
+        nc, k, nf = 9, 2, 4
+        m, s, dm, vt, mq = random_rvs(nc, k, nf, seed=2)
+        mask67 = np.ones((nc, nf), dtype=bool)
+        cm, cs, p, _, _ = ps.fused_score(m, s, dm, vt, mq, mask67, None,
+                                         None, self.E, self.Q)
+        again = ps.prob_within(cm, cs, self.E)
+        np.testing.assert_array_equal(p, again)
+
+    def test_kpad_invariance_bitwise(self):
+        """EXACT (mean=1, std=0) K-pads are the exact float32
+        multiplicative identity: folding K=2 padded to K=5 is bitwise
+        the K=2 fold."""
+        nc, nf = 6, 3
+        m, s, dm, vt, mq = random_rvs(nc, 2, nf, seed=3)
+        mask67 = np.ones((nc, nf), dtype=bool)
+        pad_m = np.concatenate([m, np.ones((nc, 3, nf))], axis=1)
+        pad_s = np.concatenate([s, np.zeros((nc, 3, nf))], axis=1)
+        a = ps.fused_score(m, s, dm, vt, mq, mask67, None, None,
+                           self.E, self.Q)
+        b = ps.fused_score(pad_m, pad_s, dm, vt, mq, mask67, None, None,
+                           self.E, self.Q)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_winner_indices_match_host_argmax(self):
+        nc, k, nf = 14, 2, 6
+        m, s, dm, vt, mq = random_rvs(nc, k, nf, seed=4)
+        mask67 = np.zeros((nc, nf), dtype=bool)
+        mask67[: nc // 2] = True
+        pre9 = np.zeros((nc, nf), dtype=bool)
+        pre9[nc // 2:] = True
+        extra = np.abs(np.random.default_rng(5).normal(size=(nc, nf))) + 0.1
+        cm, cs, p, w6, w9 = ps.fused_score(m, s, dm, vt, mq, mask67, pre9,
+                                           extra, self.E, 0.2)
+        sat = p >= 0.2
+        for f in range(nf):
+            elig = mask67[:, f] & sat[:, f]
+            if elig.any():
+                pe = np.where(elig, p[:, f], -1.0)
+                assert w6[f] == int(np.flatnonzero(pe == pe.max())[0])
+            else:
+                assert w6[f] == 2 ** 31 - 1
+                ok9 = pre9[:, f] & sat[:, f]
+                if ok9.any():
+                    xe = np.where(ok9, extra[:, f], np.inf)
+                    assert w9[f] == int(np.flatnonzero(xe == xe.min())[0])
