@@ -28,6 +28,19 @@ gated: the cache never exceeds its bound, evictions actually fired at
 every layer, and parity holds every round — evidence that eviction only
 discards recomputable state.
 
+Phase 3 — **durable recovery** (PR 10).  Drives a delta storm through a
+fleet backed by `DurableStore` (write-ahead log + atomic snapshots)
+under mild injected disk faults (torn writes, fsync failures), closes
+the store — real process death, nothing survives in memory — and times
+`AdvisorFleetService.recover(dir)` over fresh copies of the directory.
+Two store configurations contrast the latency/compaction trade:
+journal-only (`compact_after=None`, the longest possible replay) vs
+aggressive compaction (short WAL suffix).  The gate: every recovered
+tenant's post-restart recommendation is exactly `==` a fresh
+`DesignAdvisor` on its mirror workload, a scripted torn tail is
+truncated (not fatal), and the recovery-latency percentiles vs log
+length / snapshot interval land in the report.
+
 Usage:
     PYTHONPATH=src python benchmarks/fault_recovery.py [--smoke]
 """
@@ -36,14 +49,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import shutil
 import sys
+import tempfile
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import (AdvisorOptions, DesignAdvisor, FaultInjector,
-                        WorkloadDelta, base_configuration,
+from repro.core import (AdvisorOptions, DesignAdvisor, DurableStore,
+                        FaultInjector, WorkloadDelta, base_configuration,
                         make_scaled_workload, make_tpch_like)
 from repro.serve.advisor_service import (AdvisorFleetService, FleetConfig,
                                          TenantQuarantined, TicketTimeout)
@@ -262,6 +277,138 @@ def run_bounded(rounds: int, statements: int, scale: float, seed: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# Phase 3: durable recovery after real process death
+# ---------------------------------------------------------------------------
+
+def run_recovery(tenants: int, rounds: int, slots: int, statements: int,
+                 scale: float, seed: int, budget_frac: float,
+                 repeats: int, backend: str = "numpy") -> dict:
+    schema = make_tpch_like(scale=scale, z=0, seed=seed)
+    opt = dataclasses.replace(AdvisorOptions.dtac(), backend=backend)
+    fc = FleetConfig(slots=slots, retry_backoff=(1, 2, 4, 8),
+                     quarantine_after=None, backend=backend)
+    configs = [
+        {"name": "journal_only", "compact_after": None, "group_commit": 2},
+        {"name": "compact_4", "compact_after": 4, "group_commit": 1},
+    ]
+    rng = np.random.default_rng(seed + 11)
+    out_cfgs = []
+    parity_failures = 0
+    torn_tails_truncated = 0
+    with tempfile.TemporaryDirectory(prefix="bench_durability_") as tmp:
+        tmp = Path(tmp)
+        for cfg in configs:
+            base = tmp / f"{cfg['name']}_base"
+            # mild disk faults while the storm writes: torn appends and
+            # failed group commits, both retried by the fleet
+            faults = FaultInjector(seed=seed + 13, specs={
+                "disk_write": 0.05, "fsync": 0.05})
+            store = DurableStore(base, group_commit=cfg["group_commit"],
+                                 compact_after=cfg["compact_after"],
+                                 faults=faults)
+            fleet = AdvisorFleetService(fc, faults=faults, store=store)
+            mirrors, budgets = {}, {}
+            for i in range(tenants):
+                tid = f"t{i}"
+                wl = make_tenant_workload(schema, tid, statements,
+                                          seed + 31 + i)
+                mirrors[tid] = wl
+                adv = DesignAdvisor(wl, opt)
+                budgets[tid] = budget_frac * sum(
+                    adv.sizes.size(ix)
+                    for ix in base_configuration(schema).indexes)
+                fleet.register_tenant(tid, wl, opt)
+            for rnd in range(rounds):
+                dks, deltas = {}, {}
+                for tid in mirrors:
+                    deltas[tid] = make_delta(rng, tid, rnd, mirrors[tid],
+                                             schema)
+                    dks[tid] = fleet.submit_delta(tid, deltas[tid])
+                fleet.run_until_drained()
+                for tid in mirrors:
+                    if dks[tid].exception(timeout=1.0) is None:
+                        mirrors[tid] = mirrors[tid].apply_delta(
+                            deltas[tid])
+            wal_records = {tid: len(rt.deltas) for tid, rt in
+                           DurableStore(base).recover().items()}
+            storm_stats = {k: fleet.stats[k] for k in
+                           ("wal_appends", "wal_aborts", "fsyncs",
+                            "compactions", "retries")}
+            store.close()
+            del fleet                  # the process is dead; only the
+            del store                  # directory survives
+
+            recover_seconds = []
+            recovered = None
+            for r in range(repeats):
+                trial = tmp / f"{cfg['name']}_r{r}"
+                shutil.copytree(base, trial)
+                t0 = time.perf_counter()
+                recovered = AdvisorFleetService.recover(trial, fc=fc)
+                recover_seconds.append(time.perf_counter() - t0)
+            assert recovered is not None
+            if recovered.recovery_errors:
+                parity_failures += len(recovered.recovery_errors)
+                print(f"FAIL: {cfg['name']}: recovery errors "
+                      f"{recovered.recovery_errors}", file=sys.stderr)
+            # the restart-parity gate: every tenant's first
+            # post-recovery recommendation == a fresh advisor on the
+            # mirror (which only advanced on acknowledged deltas)
+            rks = {tid: recovered.submit_recommend(tid, budgets[tid])
+                   for tid in mirrors}
+            recovered.run_until_drained()
+            for tid in mirrors:
+                if not identical(rks[tid].result(),
+                                 DesignAdvisor(mirrors[tid], opt)
+                                 .recommend(budgets[tid])):
+                    parity_failures += 1
+                    print(f"FAIL: restart parity broke for {tid} under "
+                          f"{cfg['name']}", file=sys.stderr)
+
+            # scripted torn tail: garbage appended to one WAL must be
+            # truncated at recovery with the tenant fully recovered
+            torn = tmp / f"{cfg['name']}_torn"
+            shutil.copytree(base, torn)
+            with open(torn / "wal" / "t0.wal", "ab") as f:
+                f.write(b"DWAL" + b"\xff" * 20)
+            tfleet = AdvisorFleetService.recover(torn, fc=fc)
+            torn_tails_truncated += tfleet.stats["torn_tail_truncations"]
+            tk = tfleet.submit_recommend("t0", budgets["t0"])
+            tfleet.run_until_drained()
+            if not identical(tk.result(),
+                             DesignAdvisor(mirrors["t0"], opt)
+                             .recommend(budgets["t0"])):
+                parity_failures += 1
+                print(f"FAIL: torn-tail parity broke under "
+                      f"{cfg['name']}", file=sys.stderr)
+
+            out_cfgs.append({
+                "config": cfg,
+                "storm": storm_stats,
+                "wal_records_replayed": {
+                    "total": sum(wal_records.values()),
+                    "max_per_tenant": max(wal_records.values()),
+                },
+                "recovery_latency_seconds": {
+                    "repeats": repeats,
+                    "p50": round(pct(recover_seconds, 50), 5),
+                    "p99": round(pct(recover_seconds, 99), 5),
+                    "max": round(max(recover_seconds), 5),
+                },
+                "recovered_stats": {
+                    k: recovered.stats[k] for k in
+                    ("recoveries", "torn_tail_truncations",
+                     "recovery_errors")},
+            })
+    return {
+        "tenants": tenants, "rounds": rounds,
+        "parity_failures": parity_failures,
+        "torn_tails_truncated": torn_tails_truncated,
+        "configs": out_cfgs,
+    }
+
+
 def run(args, out_path: Path) -> dict:
     storm = run_storm(args.tenants, args.rounds, args.slots,
                       args.statements, args.scale, args.seed,
@@ -271,10 +418,24 @@ def run(args, out_path: Path) -> dict:
                           args.scale, args.seed, args.budget_frac,
                           args.cache_entries, args.max_nodes,
                           args.max_replay, args.backend)
+    recovery = run_recovery(args.recovery_tenants, args.recovery_rounds,
+                            args.slots, args.statements, args.scale,
+                            args.seed, args.budget_frac,
+                            args.recovery_repeats, args.backend)
     fired = storm["fault_injector"]["fired"]
+    compacting = [c for c in recovery["configs"]
+                  if c["config"]["compact_after"] is not None]
     ok = (
         storm["parity_failures"] == 0
         and bounded["parity_failures"] == 0
+        # durable restart: every tenant recovered to exact parity, the
+        # scripted torn tails were truncated (one per config), and the
+        # compacting configuration actually compacted
+        and recovery["parity_failures"] == 0
+        and recovery["torn_tails_truncated"] == len(recovery["configs"])
+        and all(c["recovered_stats"]["recoveries"] ==
+                recovery["tenants"] for c in recovery["configs"])
+        and all(c["storm"]["compactions"] > 0 for c in compacting)
         # the storm actually stormed...
         and sum(fired.values()) > 0
         and storm["fleet_stats"]["retries"] > 0
@@ -288,16 +449,21 @@ def run(args, out_path: Path) -> dict:
         and all(v > 0 for v in bounded["evictions"].values())
     )
     report = {"backend": args.backend, "storm": storm,
-              "bounded": bounded, "ok": ok}
+              "bounded": bounded, "recovery": recovery, "ok": ok}
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
     if ok:
         o = storm["outcomes"]
+        rlat = [c["recovery_latency_seconds"]["p50"]
+                for c in recovery["configs"]]
         print(f"OK: {o['exact']} exact + {o['degraded_exact']} degraded-"
               f"exact recommends through {sum(fired.values())} injected "
               f"faults, {o['crashes']} crashes, "
               f"{storm['fleet_stats']['restores']} restores; bounded "
-              f"drift held every bound with evictions at every layer")
+              f"drift held every bound with evictions at every layer; "
+              f"durable restart exact for {recovery['tenants']} tenants "
+              f"(p50 recover {min(rlat)}-{max(rlat)}s across store "
+              f"configs)")
     else:
         print("FAIL: durability gate", file=sys.stderr)
     return report
@@ -324,6 +490,13 @@ def main() -> int:
     ap.add_argument("--cache-entries", type=int, default=8)
     ap.add_argument("--max-nodes", type=int, default=20)
     ap.add_argument("--max-replay", type=int, default=10)
+    ap.add_argument("--recovery-tenants", type=int, default=8,
+                    help="tenants in the durable-recovery storm")
+    ap.add_argument("--recovery-rounds", type=int, default=6,
+                    help="delta rounds journaled before process death "
+                    "(sets the replayed log length)")
+    ap.add_argument("--recovery-repeats", type=int, default=3,
+                    help="timed recover() runs per store configuration")
     ap.add_argument("--out", type=Path, default=None,
                     help="output JSON path (default: BENCH_faults.json at "
                     "the repo root; smoke runs write "
@@ -340,6 +513,9 @@ def main() -> int:
         args.slots = 3
         args.statements = 8
         args.bounded_rounds = 3
+        args.recovery_tenants = 4
+        args.recovery_rounds = 5
+        args.recovery_repeats = 2
     if args.out is None:
         args.out = root / ("BENCH_faults.smoke.json" if args.smoke
                            else "BENCH_faults.json")

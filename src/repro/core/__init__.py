@@ -6,7 +6,8 @@
 # join synopses / Adaptive-Estimator MV cardinalities (App. B).
 from .advisor import AdvisorOptions, DesignAdvisor, Recommendation
 from .compression import DEFAULT_ADVISOR_METHODS, METHODS
-from .session import AdvisorSession, SessionSnapshot
+from .durability import DurableStore, LogCorrupt, RecoveredTenant
+from .session import AdvisorSession, SessionSnapshot, SnapshotCorrupt
 from .cost_engine import CostEngine, chunked_config_costs
 from .estimation_engine import EstimationEngine, batched_sample_cf
 from .estimation_graph import EstimationPlanner, NodeKey, Plan, State
@@ -25,7 +26,8 @@ from .workload_compression import ClusterIndex, CompressedWorkload, \
 
 __all__ = [
     "AdvisorOptions", "DesignAdvisor", "Recommendation", "AdvisorSession",
-    "SessionSnapshot",
+    "SessionSnapshot", "SnapshotCorrupt",
+    "DurableStore", "LogCorrupt", "RecoveredTenant",
     "DEFAULT_ADVISOR_METHODS", "METHODS", "CostEngine",
     "chunked_config_costs",
     "ClusterIndex", "CompressedWorkload", "compress_workload",

@@ -24,6 +24,24 @@ Sites (the places the stack calls `check()` / `fires()`):
   (group, f) batch.
 * ``apply_delta``  — top of `AdvisorSession.apply`, before any state
   is touched (so a faulted delta is cleanly retryable).
+* ``disk_write``   — `durability.DurableStore.log_delta`: a firing
+  here tears the append (only a prefix of the record reaches the file)
+  and raises; the next append truncates back to the last good offset,
+  and recovery truncates the torn tail the same way.
+* ``fsync``        — the store's WAL group-commit fsync: the record is
+  fully written but its durability is unconfirmed, so the store
+  appends an ABORT record for it and raises (the retry re-journals
+  under a fresh sequence number — replay can never double-apply).
+* ``bit_flip``     — silent media corruption: one bit of the record
+  payload is flipped BEFORE it is written (deterministically derived
+  from the site's check index), no error is raised, and only
+  recovery's CRC scan can detect it (mid-log corruption quarantines
+  the tenant).
+
+Site streams are seeded independently per site — (seed,
+crc32(site)) — so enabling the disk sites cannot shift a single draw
+of the PR 7 sites' schedules (pinned by a regression test in
+tests/test_faults.py).
 
 `FaultError` marks a fault as TRANSIENT: the fleet service retries
 requests that fail with it (bounded, deterministic backoff) and treats
@@ -38,9 +56,12 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
-#: The named sites the advisor stack is instrumented with.
+#: The named sites the advisor stack is instrumented with.  The disk
+#: sites ("disk_write", "fsync", "bit_flip") were appended for the
+#: durability layer; appending keeps every earlier site's stream seed —
+#: (seed, crc32(site)) — untouched.
 SITES = ("estimation", "costing", "planner_replay", "prefetch",
-         "apply_delta")
+         "apply_delta", "disk_write", "fsync", "bit_flip")
 
 
 class FaultError(RuntimeError):

@@ -43,7 +43,9 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
+import struct
 import time
+import zlib
 from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple, Union
 
 from . import candidates as cand
@@ -75,6 +77,37 @@ class _Selection:
     n_costed: int
 
 
+#: Serialized-snapshot framing: magic + format version + payload length
+#: + CRC32(payload), then the pickled snapshot.  The header is what lets
+#: `from_bytes` tell "tampered or truncated" (SnapshotCorrupt, with the
+#: offset and expected-vs-actual checksum) apart from "a different,
+#: incompatible format version" — instead of surfacing whatever
+#: `pickle.loads` happens to throw at corrupt bytes.
+SNAPSHOT_MAGIC = b"RSNP"
+SNAPSHOT_FORMAT_VERSION = 1
+_SNAP_HEADER = struct.Struct("<4sHII")   # magic, version, length, crc32
+
+
+class SnapshotCorrupt(ValueError):
+    """Serialized `SessionSnapshot` bytes failed validation.
+
+    `offset` is the byte offset of the failure; for checksum failures
+    `expected_crc` / `actual_crc` carry the header CRC vs the CRC of the
+    bytes actually present."""
+
+    def __init__(self, msg: str, offset: int = 0,
+                 expected_crc: Optional[int] = None,
+                 actual_crc: Optional[int] = None):
+        detail = f"{msg} (at byte {offset}"
+        if expected_crc is not None:
+            detail += (f"; checksum expected {expected_crc:#010x}, "
+                       f"actual {actual_crc:#010x}")
+        super().__init__(detail + ")")
+        self.offset = offset
+        self.expected_crc = expected_crc
+        self.actual_crc = actual_crc
+
+
 @dataclasses.dataclass
 class SessionSnapshot:
     """Self-contained checkpoint of an `AdvisorSession`.
@@ -98,11 +131,40 @@ class SessionSnapshot:
     estimates: Dict[Tuple[NodeKey, float], SizeEstimate]
 
     def to_bytes(self) -> bytes:
-        return pickle.dumps(self)
+        payload = pickle.dumps(self)
+        return _SNAP_HEADER.pack(SNAPSHOT_MAGIC, SNAPSHOT_FORMAT_VERSION,
+                                 len(payload), zlib.crc32(payload)) + payload
 
     @staticmethod
     def from_bytes(data: bytes) -> "SessionSnapshot":
-        snap = pickle.loads(data)
+        data = bytes(data)
+        if len(data) < _SNAP_HEADER.size:
+            raise SnapshotCorrupt(
+                f"truncated snapshot: {len(data)} bytes is shorter than "
+                f"the {_SNAP_HEADER.size}-byte header", offset=len(data))
+        magic, version, length, crc = _SNAP_HEADER.unpack_from(data, 0)
+        if magic != SNAPSHOT_MAGIC:
+            raise SnapshotCorrupt(
+                f"bad magic {magic!r} (expected {SNAPSHOT_MAGIC!r}) — not "
+                "a serialized SessionSnapshot", offset=0)
+        if version != SNAPSHOT_FORMAT_VERSION:
+            raise SnapshotCorrupt(
+                f"snapshot format version {version} is not supported by "
+                f"this build (supported version: "
+                f"{SNAPSHOT_FORMAT_VERSION})", offset=4)
+        if len(data) - _SNAP_HEADER.size < length:
+            raise SnapshotCorrupt(
+                f"truncated snapshot payload: header promises {length} "
+                f"bytes, {len(data) - _SNAP_HEADER.size} present",
+                offset=len(data))
+        payload = data[_SNAP_HEADER.size:_SNAP_HEADER.size + length]
+        actual = zlib.crc32(payload)
+        if actual != crc:
+            raise SnapshotCorrupt(
+                "snapshot payload checksum mismatch (tampered or "
+                "corrupted bytes)", offset=_SNAP_HEADER.size,
+                expected_crc=crc, actual_crc=actual)
+        snap = pickle.loads(payload)
         if not isinstance(snap, SessionSnapshot):
             raise TypeError(f"not a SessionSnapshot: {type(snap)!r}")
         return snap

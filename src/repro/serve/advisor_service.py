@@ -74,6 +74,24 @@ Durability (the fleet's failure surface, driven by a seeded
   recommendation is exactly `==` a fresh `DesignAdvisor` — the parity
   contract extended to crash recovery.  `crash_tenant` simulates
   process loss for tests/benchmarks.
+* **Durable crash recovery** (PR 10) — construct the fleet with
+  `store=DurableStore(dir)` and every admitted delta is journaled to
+  the tenant's write-ahead log BEFORE it touches the session (a delta
+  that then fails to apply is compensated with an ABORT record, so
+  replay can never apply it), with the store compacting the WAL into an
+  atomically-rotated snapshot manifest when the log suffix exceeds its
+  threshold.  After real process death,
+  `AdvisorFleetService.recover(dir)` rebuilds the entire fleet — per
+  tenant: latest valid snapshot, replay of the WAL suffix — and every
+  recovered tenant's next recommendation is exactly `==` a fresh
+  `DesignAdvisor` on the recovered workload.  Torn WAL tails are
+  truncated at the last valid record; mid-log corruption (e.g. an
+  injected `bit_flip`) quarantines only that tenant, on its last valid
+  prefix, via the same `TenantQuarantined` path — recovery itself never
+  fails the fleet.  Recovery errors are kept in
+  `fleet.recovery_errors`, and the store's durability counters
+  (`wal_appends`/`fsyncs`/`compactions`/`recoveries`/
+  `torn_tail_truncations`) surface through `stats`.
 
 Correctness contract (asserted in tests/test_fleet_service.py and every
 round of benchmarks/fleet_scaling.py + fault_recovery.py): after any
@@ -101,6 +119,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ..core.advisor import AdvisorOptions
 from ..core.cost_engine import batched_candidate_costs
+from ..core.durability import DurableStore, RecoveredTenant
 from ..core.estimation_engine import EstimationEngine
 from ..core.estimation_graph import NodeKey, State
 from ..core.faults import FaultError, FaultInjector
@@ -276,7 +295,9 @@ class _Tenant:
     tenant_id: str
     session: Optional[AdvisorSession]
     budget: TenantBudget
-    group: _ShareGroup
+    # None only for a recovered "husk": the durable snapshot itself was
+    # unreadable, so there is no schema to attach a share group to
+    group: Optional[_ShareGroup]
     snapshot: Optional[SessionSnapshot] = None  # last good checkpoint
     in_flight: Optional[_FleetRequest] = None
     n_pending: int = 0                # queued + in-flight requests
@@ -304,14 +325,23 @@ class AdvisorFleetService:
     """
 
     def __init__(self, fc: Optional[FleetConfig] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 store: Optional[DurableStore] = None):
         self.fc = fc or FleetConfig()
         if self.fc.slots < 1:
             raise ValueError("need at least one slot")
         # one injector threads the whole stack: sessions check
         # "apply_delta"/"estimation"/"costing" (and their planners
-        # "planner_replay"); the service itself checks "prefetch"
+        # "planner_replay"); the service itself checks "prefetch"; the
+        # durable store checks "disk_write"/"fsync"/"bit_flip"
         self.faults = faults
+        self.store = store
+        if store is not None and store.faults is None:
+            store.faults = faults
+        # tenant id -> the exception that degraded its recovery (mid-log
+        # corruption, unreadable snapshot, replay failure); such tenants
+        # come back quarantined on their last valid durable prefix
+        self.recovery_errors: Dict[str, BaseException] = {}
         self.tenants: Dict[str, _Tenant] = {}
         self.groups: Dict[Tuple[str, str], _ShareGroup] = {}
         self.queue: List[_FleetRequest] = []          # global arrival order
@@ -351,13 +381,7 @@ class AdvisorFleetService:
                 f"tenant {tenant_id!r}: initial workload of "
                 f"{len(workload.statements)} statements exceeds "
                 f"max_statements={budget.max_statements}")
-        key = (schema_fingerprint(workload.schema, opt.sample_seed),
-               opt.estimation_backend)
-        group = self.groups.get(key)
-        if group is None:
-            group = self.groups[key] = _ShareGroup(
-                key, workload.schema.tables, opt.sample_seed,
-                self.fc.backend, self.fc.cache_entries)
+        group = self._group_for(workload.schema, opt)
         group.n_tenants += 1
         session = AdvisorSession(workload, opt, samples=group.samples,
                                  sampled_cache=group.cache,
@@ -369,7 +393,22 @@ class AdvisorFleetService:
         # cache, which survives the session (copying it per tenant per
         # checkpoint would duplicate the whole shared cache).
         t.snapshot = session.snapshot(include_estimates=False)
+        if self.store is not None:
+            self.store.register(tenant_id, t.snapshot.to_bytes(),
+                                meta=budget)
         self.tenants[tenant_id] = t
+
+    def _group_for(self, schema, opt: AdvisorOptions) -> _ShareGroup:
+        """The tenant's share group — one per (schema fingerprint,
+        estimation backend), created on first use."""
+        key = (schema_fingerprint(schema, opt.sample_seed),
+               opt.estimation_backend)
+        group = self.groups.get(key)
+        if group is None:
+            group = self.groups[key] = _ShareGroup(
+                key, schema.tables, opt.sample_seed,
+                self.fc.backend, self.fc.cache_entries)
+        return group
 
     def crash_tenant(self, tenant_id: str) -> None:
         """Simulate process loss of one tenant's session: the session is
@@ -389,16 +428,116 @@ class AdvisorFleetService:
         t = self.tenants[tenant_id]
         if t.quarantined_at is None:
             raise ValueError(f"tenant {tenant_id!r} is not quarantined")
-        assert t.snapshot is not None
+        if t.snapshot is None or t.group is None:
+            raise SessionLost(
+                f"tenant {tenant_id!r} has no restorable checkpoint "
+                "(its durable snapshot was unreadable at recovery); "
+                "re-register it with a fresh workload")
         t0 = time.perf_counter()
         t.session = AdvisorSession.restore(
             t.snapshot, samples=t.group.samples,
             sampled_cache=t.group.cache, faults=self.faults)
         self.restore_seconds.append(time.perf_counter() - t0)
+        if self.store is not None:
+            # realign the durable state with the checkpoint we just
+            # restored to: a corrupt/poisoned WAL suffix must not be
+            # replayed on top of it at the next recovery
+            self.store.checkpoint(tenant_id, t.snapshot.to_bytes(),
+                                  meta=t.budget)
+        self.recovery_errors.pop(tenant_id, None)
         t.quarantined_at = None
         t.consecutive_failures = 0
         t.restores += 1
         self.restores += 1
+
+    # ------------------------------------------------------------------
+    # Durable recovery (after real process death)
+    # ------------------------------------------------------------------
+    @classmethod
+    def recover(cls, store_or_dir,
+                fc: Optional[FleetConfig] = None,
+                faults: Optional[FaultInjector] = None
+                ) -> "AdvisorFleetService":
+        """Rebuild a fleet from a durable store directory: per tenant,
+        restore the latest valid snapshot manifest and replay the WAL
+        suffix of journaled-but-uncheckpointed deltas.  Every cleanly
+        recovered tenant's next recommendation is exactly `==` a fresh
+        `DesignAdvisor` on the recovered workload.  Degraded tenants —
+        mid-log corruption, unreadable snapshot, a replay failure —
+        come back QUARANTINED on their last valid durable prefix
+        (`recovery_errors[tenant_id]` holds why) instead of failing the
+        fleet; `readmit_tenant` restores them from that prefix."""
+        store = (store_or_dir if isinstance(store_or_dir, DurableStore)
+                 else DurableStore(store_or_dir))
+        fleet = cls(fc=fc, faults=faults, store=store)
+        recovered = store.recover()
+        for tid in sorted(recovered):
+            fleet._recover_tenant(recovered[tid])
+        return fleet
+
+    def _recover_tenant(self, rt: RecoveredTenant) -> None:
+        tid = rt.tenant_id
+        budget = (rt.meta if isinstance(rt.meta, TenantBudget)
+                  else TenantBudget())
+        error: Optional[BaseException] = rt.error
+        snap: Optional[SessionSnapshot] = None
+        if rt.snapshot_bytes is not None:
+            try:
+                snap = SessionSnapshot.from_bytes(rt.snapshot_bytes)
+            except Exception as e:
+                error = error or e
+        if snap is None:
+            # unrecoverable husk: with no readable snapshot there is no
+            # schema, no share group, nothing to replay onto — keep the
+            # tenant visible (quarantined, submits rejected) so the
+            # loss is observable rather than silent
+            t = _Tenant(tid, None, budget, None)
+            self.tenants[tid] = t
+            err = error or SessionLost(
+                f"tenant {tid!r}: no readable durable snapshot")
+            self.recovery_errors[tid] = err
+            self._quarantine(t, f"recovery failed: {err}")
+            return
+        t0 = time.perf_counter()
+        group = self._group_for(snap.workload.schema, snap.options)
+        session: Optional[AdvisorSession] = None
+        try:
+            # replay with fault injection OFF: recovery re-applies
+            # already-admitted work, and a storm firing mid-replay would
+            # turn deterministic history into a coin flip
+            session = AdvisorSession.restore(
+                snap, samples=group.samples, sampled_cache=group.cache,
+                faults=None)
+            for delta in rt.deltas:
+                try:
+                    session.apply(delta)
+                except Exception as e:
+                    # almost always the final record: a delta journaled
+                    # by the write-ahead rule but never validated by an
+                    # apply before the crash.  Keep the state up to it.
+                    error = error or e
+                    break
+        except Exception as e:
+            error = error or e
+        self.restore_seconds.append(time.perf_counter() - t0)
+        if session is None:
+            t = _Tenant(tid, None, budget, None)
+            self.tenants[tid] = t
+            self.recovery_errors[tid] = error
+            self._quarantine(t, f"recovery failed: {error}")
+            return
+        group.n_tenants += 1
+        t = _Tenant(tid, session, budget, group)
+        t.snapshot = session.snapshot(include_estimates=False)
+        self.tenants[tid] = t
+        if error is not None:
+            self.recovery_errors[tid] = error
+            # the durable log is poisoned past this prefix — realign it
+            # with the recovered state so the next crash replays cleanly
+            self.store.checkpoint(tid, t.snapshot.to_bytes(), meta=budget)
+            self._quarantine(t, f"recovery degraded: {error}")
+            return
+        session.faults = self.faults
 
     # ------------------------------------------------------------------
     # Submission (admission control)
@@ -699,12 +838,28 @@ class AdvisorFleetService:
                             f"tenant {req.tenant_id!r}: delta would grow "
                             f"the workload to {projected} statements "
                             f"(max_statements={cap})")
-                t.session.apply(req.delta)
+                if self.store is None:
+                    t.session.apply(req.delta)
+                else:
+                    # write-ahead: journal the admitted delta BEFORE it
+                    # touches the session.  A failed apply is
+                    # compensated with an ABORT record so recovery can
+                    # never replay a delta the live fleet rejected.
+                    seq = self.store.log_delta(req.tenant_id, req.delta)
+                    try:
+                        t.session.apply(req.delta)
+                    except BaseException:
+                        self.store.log_abort(req.tenant_id, seq)
+                        raise
                 t.deltas_applied += 1
                 # checkpoint AFTER every successful delta: the snapshot
                 # always equals the live workload (failed deltas never
                 # mutate), so a later crash restores to current state
                 t.snapshot = t.session.snapshot(include_estimates=False)
+                if self.store is not None:
+                    self.store.maybe_compact(
+                        req.tenant_id, t.snapshot.to_bytes,
+                        meta=t.budget)
                 t.consecutive_failures = 0
                 req.ticket._resolve({
                     "applied": True,
@@ -804,6 +959,12 @@ class AdvisorFleetService:
                 1 for t in self.tenants.values()
                 if t.quarantined_at is not None),
         }
+        # durability counters (all zero for a store-less fleet)
+        ds = self.store.stats() if self.store is not None else {}
+        for k in ("wal_appends", "wal_aborts", "fsyncs", "compactions",
+                  "recoveries", "torn_tail_truncations"):
+            out[k] = ds.get(k, 0)
+        out["recovery_errors"] = len(self.recovery_errors)
         out["shared_cache_entries"] = sum(
             len(g.cache) for g in self.groups.values())
         out["shared_cache_evictions"] = sum(
@@ -822,7 +983,8 @@ class AdvisorFleetService:
                    quarantined=t.quarantined_at is not None,
                    quarantines=t.quarantines,
                    restores=t.restores,
-                   group_tenants=t.group.n_tenants)
+                   group_tenants=(t.group.n_tenants
+                                  if t.group is not None else 0))
         if t.session is not None:
             out["n_statements"] = len(t.session.workload.statements)
         return out

@@ -28,9 +28,12 @@ import pytest
 
 from repro.core import (AdvisorOptions, AdvisorSession, DesignAdvisor,
                         EstimateCache, FaultError, FaultInjector, FaultSpec,
-                        SessionSnapshot, WorkloadDelta, base_configuration,
-                        make_scaled_workload, make_tpch_like)
+                        SessionSnapshot, SnapshotCorrupt, WorkloadDelta,
+                        base_configuration, make_scaled_workload,
+                        make_tpch_like)
 from repro.core.faults import SITES
+from repro.core.session import (SNAPSHOT_FORMAT_VERSION, SNAPSHOT_MAGIC,
+                                _SNAP_HEADER)
 
 
 @pytest.fixture(scope="module")
@@ -141,6 +144,55 @@ class TestFaultInjector:
             inj.check("costing", "during recommend")
         assert ei.value.site == "costing" and ei.value.n == 1
         assert "during recommend" in str(ei.value)
+
+    # The PR 7 sites' schedules for seed=7 at rate 0.5, pinned as
+    # literals: adding the disk sites ("disk_write"/"fsync"/"bit_flip")
+    # to SITES must leave every pre-existing stream bit-identical,
+    # because streams are seeded per site — (seed, crc32(site)) — not
+    # by position in SITES.  If this test ever fails, a change broke
+    # the per-site seeding and silently reshuffled every storm schedule
+    # in the test/benchmark suite.
+    LEGACY_SITES = ("estimation", "costing", "planner_replay", "prefetch",
+                    "apply_delta")
+    PINNED_SEED7_RATE50 = {
+        "estimation": "101100011101101100111010",
+        "costing": "110011101001000100000000",
+        "planner_replay": "000001111000011101111010",
+        "prefetch": "000011100010101010100011",
+        "apply_delta": "110001100010100111011000",
+    }
+
+    def test_legacy_schedules_pinned(self):
+        inj = FaultInjector(seed=7,
+                            specs={s: 0.5 for s in self.LEGACY_SITES})
+        got = {s: "".join("1" if inj.fires(s) else "0"
+                          for _ in range(24))
+               for s in self.LEGACY_SITES}
+        assert got == self.PINNED_SEED7_RATE50
+
+    def test_disk_sites_do_not_shift_legacy_schedules(self):
+        """Enabling (and exercising) the disk sites leaves the legacy
+        sites' draws untouched — same literals as the pinned test."""
+        specs = {s: 0.5 for s in self.LEGACY_SITES}
+        specs.update({"disk_write": 0.5, "fsync": 0.5, "bit_flip": 0.5})
+        inj = FaultInjector(seed=7, specs=specs)
+        got = {}
+        for s in self.LEGACY_SITES:
+            bits = []
+            for i in range(24):
+                # noisy interleaved disk-site checks between every draw
+                for d in ("disk_write", "fsync", "bit_flip")[:i % 4]:
+                    inj.fires(d)
+                bits.append("1" if inj.fires(s) else "0")
+            got[s] = "".join(bits)
+        assert got == self.PINNED_SEED7_RATE50
+
+    def test_disk_sites_registered(self):
+        assert SITES[-3:] == ("disk_write", "fsync", "bit_flip")
+        inj = FaultInjector(specs={"disk_write": FaultSpec(at=(0,))})
+        assert inj.fires("disk_write") is True
+        assert inj.fires("fsync") is False   # unspecced sites still count
+        assert inj.checks["fsync"] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -301,8 +353,49 @@ class TestSnapshotRestore:
                          DesignAdvisor(back.workload).recommend(budget))
 
     def test_from_bytes_rejects_non_snapshot(self):
-        with pytest.raises(TypeError, match="not a SessionSnapshot"):
+        """Unframed bytes fail the magic check (SnapshotCorrupt); a
+        correctly framed payload that is not a SessionSnapshot still
+        raises the original TypeError."""
+        import zlib
+        with pytest.raises(SnapshotCorrupt, match="magic"):
             SessionSnapshot.from_bytes(pickle.dumps({"nope": 1}))
+        payload = pickle.dumps({"nope": 1})
+        framed = _SNAP_HEADER.pack(SNAPSHOT_MAGIC, SNAPSHOT_FORMAT_VERSION,
+                                   len(payload), zlib.crc32(payload)) \
+            + payload
+        with pytest.raises(TypeError, match="not a SessionSnapshot"):
+            SessionSnapshot.from_bytes(framed)
+
+    def test_snapshot_header_truncation_detected(self, workload):
+        blob = AdvisorSession(workload).snapshot().to_bytes()
+        for cut in (0, 5, _SNAP_HEADER.size - 1):
+            with pytest.raises(SnapshotCorrupt, match="truncated"):
+                SessionSnapshot.from_bytes(blob[:cut])
+        with pytest.raises(SnapshotCorrupt, match="truncated") as ei:
+            SessionSnapshot.from_bytes(blob[:len(blob) // 2])
+        assert ei.value.offset == len(blob) // 2
+
+    def test_snapshot_tamper_detected_with_checksums(self, workload):
+        blob = bytearray(AdvisorSession(workload).snapshot().to_bytes())
+        blob[_SNAP_HEADER.size + 7] ^= 0x40
+        with pytest.raises(SnapshotCorrupt, match="checksum") as ei:
+            SessionSnapshot.from_bytes(bytes(blob))
+        assert ei.value.expected_crc is not None
+        assert ei.value.actual_crc is not None
+        assert ei.value.expected_crc != ei.value.actual_crc
+        # the message carries both sums for the operator
+        assert f"{ei.value.expected_crc:#010x}" in str(ei.value)
+        assert f"{ei.value.actual_crc:#010x}" in str(ei.value)
+
+    def test_snapshot_version_mismatch_names_both(self, workload):
+        blob = AdvisorSession(workload).snapshot().to_bytes()
+        magic, version, length, crc = _SNAP_HEADER.unpack_from(blob, 0)
+        future = _SNAP_HEADER.pack(magic, version + 41, length, crc) \
+            + blob[_SNAP_HEADER.size:]
+        with pytest.raises(SnapshotCorrupt) as ei:
+            SessionSnapshot.from_bytes(future)
+        assert str(version + 41) in str(ei.value)
+        assert str(SNAPSHOT_FORMAT_VERSION) in str(ei.value)
 
     def test_retired_names_survive_restore(self, workload, pool):
         sess = AdvisorSession(workload)

@@ -445,3 +445,58 @@ class TestDurability:
         s = fleet.stats
         assert s["shared_cache_entries"] <= 8
         assert s["shared_cache_evictions"] > 0
+
+
+class TestDurableStoreWiring:
+    """The fleet x DurableStore integration surface (the store's own
+    semantics and the crash-point harness live in test_durability.py):
+    journal-before-apply ordering, budget metadata round-tripping, and
+    store-backed fleets behaving identically to store-less ones."""
+
+    def test_store_backed_fleet_same_answers_as_storeless(self, schema,
+                                                          tmp_path):
+        from repro.core import DurableStore
+        opt = AdvisorOptions.dtac()
+        plain, wls = make_fleet(schema, 2, opt)
+        store = DurableStore(tmp_path, compact_after=2)
+        durable = AdvisorFleetService(FleetConfig(slots=3), store=store)
+        for tid, wl in wls.items():
+            durable.register_tenant(tid, wl, opt)
+        added = tuple(dataclasses.replace(s, name=f"d{j}")
+                      for j, s in enumerate(make_scaled_workload(
+                          schema, n_statements=2, seed=900).statements))
+        results = {}
+        for fleet in (plain, durable):
+            fleet.submit_delta("t0", WorkloadDelta(added=added))
+            tk = fleet.submit_recommend("t0", BUDGET)
+            fleet.run_until_drained()
+            results[fleet] = tk.result()
+        assert identical(results[plain], results[durable])
+        assert durable.stats["wal_appends"] == 1
+
+    def test_budget_metadata_survives_recovery(self, schema, tmp_path):
+        from repro.core import DurableStore
+        store = DurableStore(tmp_path)
+        fleet = AdvisorFleetService(FleetConfig(slots=1), store=store)
+        wl = tenant_workload(schema, "t0", seed=50)
+        budget = TenantBudget(max_statements=len(wl.statements) + 1,
+                              max_pending=7)
+        fleet.register_tenant("t0", wl, AdvisorOptions.dtac(),
+                              budget=budget)
+        store.close()
+        f2 = AdvisorFleetService.recover(tmp_path)
+        got = f2.tenants["t0"].budget
+        assert got.max_statements == budget.max_statements
+        assert got.max_pending == budget.max_pending
+        # and the cap is live: the oversize delta is rejected before it
+        # is ever journaled, so the next recovery replays nothing
+        added = tuple(dataclasses.replace(s, name=f"x{j}")
+                      for j, s in enumerate(make_scaled_workload(
+                          schema, n_statements=3, seed=901).statements))
+        tk = f2.submit_delta("t0", WorkloadDelta(added=added))
+        f2.run_until_drained()
+        assert isinstance(tk.exception(30), TenantBudgetExceeded)
+        f2.store.close()
+        f3 = AdvisorFleetService.recover(tmp_path)
+        assert len(f3.tenants["t0"].session.workload.statements) \
+            == len(wl.statements)
